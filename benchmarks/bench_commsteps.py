@@ -1,0 +1,37 @@
+"""Theorem 3 — communication-step accounting vs the real schedule.
+
+Reports, for every (dimension × variant): the paper's 12·G·d_h−2 formula,
+the actual spanning-tree send count (2·(G·P−1)), the critical-path rounds
+(= 2·d_h+3, the topology diameter), and the analytic comm-time comparison
+paper-schedule vs fused all-to-all (beyond-paper)."""
+
+from __future__ import annotations
+
+from benchmarks.common import DIMS, emit
+from repro.core import OHHCTopology
+from repro.core.sample_sort import compare_schedules
+from repro.core.schedule import AccumulationSchedule
+
+
+def run(paper: bool = False) -> dict:
+    out = {}
+    for variant in ("full", "half"):
+        for d_h in DIMS:
+            topo = OHHCTopology(d_h, variant)
+            s = AccumulationSchedule.build(topo)
+            cmp = compare_schedules(topo, n_total=2_621_440)
+            out[(variant, d_h)] = (s.paper_step_count(), s.roundtrip_send_count())
+            emit(
+                f"thm3/commsteps/{variant}/d{d_h}",
+                cmp["paper_schedule_s"] * 1e6,
+                f"paper_formula={s.paper_step_count()};"
+                f"tree_roundtrip={s.roundtrip_send_count()};"
+                f"critical_rounds={s.critical_path_rounds()};"
+                f"fused_exchange_us={cmp['fused_exchange_s']*1e6:.1f};"
+                f"fused_speedup={cmp['speedup']:.1f}x",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

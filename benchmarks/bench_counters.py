@@ -1,0 +1,48 @@
+"""Figs 6.20–6.24 — recursion calls / iterations / swaps counters.
+
+Instrumented middle-pivot quicksort (Hoare swap semantics) summed over the
+per-processor buckets, dimensions 1–4, Random vs Sorted — reproducing:
+* recursions ~steady across dims, iterations drop significantly (6.20/21)
+* sorted swaps ≪ random swaps (6.22)
+* higher dimension → fewer comparisons (6.23), swaps ~flat (6.24)
+
+Size note: counters walk segments in Python; default 1M elements (the
+paper's 30MB=7.9M with --paper)."""
+
+from __future__ import annotations
+
+from benchmarks.common import DIMS, emit
+from repro.core import OHHCTopology, bitonic_counters, parallel_quicksort_counters
+from repro.data.distributions import make_array
+
+
+def run(paper: bool = False) -> dict:
+    n = 7_864_320 if paper else 1_000_000
+    out = {}
+    for dist in ("random", "sorted"):
+        x = make_array(dist, n, seed=30).astype("int64")
+        for d_h in DIMS:
+            topo = OHHCTopology(d_h, "full")
+            c = parallel_quicksort_counters(x, topo)
+            out[(dist, d_h)] = c
+            emit(
+                f"fig6.20-24/counters/{dist}/d{d_h}",
+                0.0,
+                f"recursions={c.recursion_calls};iterations={c.iterations};"
+                f"swaps={c.swaps};procs={topo.total_procs}",
+            )
+    # TPU-native local sort (bitonic network) closed-form comparisons for the
+    # same bucket sizes — the hardware-adaptation counterpart of Fig 6.23.
+    for d_h in DIMS:
+        topo = OHHCTopology(d_h, "full")
+        bc = bitonic_counters(n // topo.total_procs)
+        emit(
+            f"fig6.23/bitonic/d{d_h}",
+            0.0,
+            f"comparisons_per_bucket={bc['comparisons']};stages={bc['stages']}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Figs 6.12–6.19 — efficiency E = T_S / (P · T_P) for G=P and G=P/2.
+
+Reproduces the paper's findings: efficiency decreases with processor
+count (dimension), is nearly size-independent, and is highest for
+sorted/reverse-sorted inputs."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DIMS, emit, n_for_mb, sizes_mb, time_call
+from repro.core import OHHCTopology, ohhc_sort_host
+from repro.data.distributions import DISTRIBUTIONS, make_array
+
+
+def run(paper: bool = False, variant: str = "full") -> dict:
+    fig = "fig6.12-15" if variant == "full" else "fig6.16-19"
+    out = {}
+    for dist in DISTRIBUTIONS:
+        for mb in sizes_mb(paper):
+            n = n_for_mb(mb)
+            x = make_array(dist, n, seed=mb)
+            t_seq = time_call(lambda: np.sort(x, kind="quicksort"), repeats=3)
+            for d_h in DIMS:
+                topo = OHHCTopology(d_h, variant)
+                r = ohhc_sort_host(x, topo, method="paper")
+                e = t_seq / (topo.total_procs * r.t_parallel_model_s)
+                out[(variant, dist, mb, d_h)] = e
+                emit(
+                    f"{fig}/efficiency/{variant}/{dist}/d{d_h}/{mb}MB",
+                    r.t_parallel_model_s * 1e6,
+                    f"efficiency={e:.4f};procs={topo.total_procs}",
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""MoE dispatch (the technique's ML integration): sorted (bucket) dispatch
+vs dense one-hot einsum — wall time + dispatch buffer stats on CPU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import moe as MOE
+from repro.models.common import NO_SHARD
+
+
+def run(paper: bool = False) -> None:
+    for E, k, T in ((8, 2, 4096), (64, 6, 4096)):
+        cfg = ModelConfig(
+            family="moe", d_model=256, dtype=jnp.bfloat16,
+            moe=MoEConfig(num_experts=E, num_experts_per_tok=k, expert_d_ff=512,
+                          dispatch="sorted", capacity_factor=1.25),
+        )
+        p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, T, 256), jnp.bfloat16)
+        f_sorted = jax.jit(lambda x: MOE.apply_moe(p, x, cfg, NO_SHARD)[0])
+        cfg_d = cfg.replace(moe=MoEConfig(num_experts=E, num_experts_per_tok=k,
+                                          expert_d_ff=512, dispatch="dense"))
+        f_dense = jax.jit(lambda x: MOE.apply_moe(p, x, cfg_d, NO_SHARD)[0])
+        t_s = time_call(lambda: f_sorted(x).block_until_ready())
+        t_d = time_call(lambda: f_dense(x).block_until_ready())
+        emit(f"moe/sorted_dispatch/E{E}k{k}", t_s * 1e6, f"dense_us={t_d*1e6:.0f};speedup={t_d/t_s:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Figs 6.2/6.3 — parallel OHHC quicksort execution time over dimensions
+(1–4), distributions and sizes.
+
+T_P uses the paper's own metric — "the time of the last thread finish":
+max per-processor bucket sort time (measured) + the communication model
+over the real accumulation schedule (store-and-forward, per-round largest
+message, electrical vs optical bandwidths — the link asymmetry the paper
+explicitly could NOT simulate)."""
+
+from __future__ import annotations
+
+from benchmarks.common import DIMS, emit, n_for_mb, sizes_mb
+from repro.core import OHHCTopology, ohhc_sort_host
+from repro.data.distributions import DISTRIBUTIONS, make_array
+
+
+def run(paper: bool = False, variant: str = "full", method: str = "paper") -> dict:
+    out = {}
+    for d_h in DIMS:
+        topo = OHHCTopology(d_h, variant)
+        for dist in DISTRIBUTIONS:
+            for mb in sizes_mb(paper):
+                n = n_for_mb(mb)
+                x = make_array(dist, n, seed=mb)
+                r = ohhc_sort_host(x, topo, method=method)
+                t = r.t_parallel_model_s
+                out[(d_h, dist, mb)] = r
+                emit(
+                    f"fig6.2/parallel/{variant}/d{d_h}/{dist}/{mb}MB",
+                    t * 1e6,
+                    f"procs={topo.total_procs};maxsort_us={r.local_sort_times_s.max()*1e6:.0f};"
+                    f"comm_us={r.comm_model_time_s*1e6:.0f};"
+                    f"imb={r.bucket_sizes.max()/max(r.bucket_sizes.mean(),1e-9):.2f}",
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig 6.1 — sequential quicksort over array types × sizes.
+
+Baseline T_S for every speedup/efficiency figure.  np.sort(kind=quicksort)
+is the C-grade sequential quicksort (introsort); the paper's observation —
+sorted/reverse-sorted inputs run faster than random — reproduces."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, n_for_mb, sizes_mb, time_call
+from repro.data.distributions import DISTRIBUTIONS, make_array
+
+
+def run(paper: bool = False) -> dict:
+    ts = {}
+    for mb in sizes_mb(paper):
+        n = n_for_mb(mb)
+        for dist in DISTRIBUTIONS:
+            x = make_array(dist, n, seed=mb)
+            t = time_call(lambda: np.sort(x, kind="quicksort"), repeats=3)
+            ts[(dist, mb)] = t
+            emit(f"fig6.1/sequential/{dist}/{mb}MB", t * 1e6, f"n={n}")
+    return ts
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Figs 6.4–6.11 — relative speedup S = T_S / T_P for G=P (full) and
+G=P/2 (half) across dimensions, distributions, sizes.
+
+Also runs the beyond-paper sampled-splitter variant side by side: the
+paper's 'local distribution stalls at ~10%' pathology disappears."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DIMS, emit, n_for_mb, sizes_mb, time_call
+from repro.core import OHHCTopology, ohhc_sort_host
+from repro.data.distributions import DISTRIBUTIONS, make_array
+
+
+def run(paper: bool = False, variant: str = "full") -> dict:
+    fig = "fig6.4-7" if variant == "full" else "fig6.8-11"
+    out = {}
+    for dist in DISTRIBUTIONS:
+        for mb in sizes_mb(paper):
+            n = n_for_mb(mb)
+            x = make_array(dist, n, seed=mb)
+            t_seq = time_call(lambda: np.sort(x, kind="quicksort"), repeats=3)
+            for d_h in DIMS:
+                topo = OHHCTopology(d_h, variant)
+                for method in ("paper", "sampled"):
+                    r = ohhc_sort_host(x, topo, method=method)
+                    s = t_seq / r.t_parallel_model_s
+                    out[(variant, dist, mb, d_h, method)] = s
+                    emit(
+                        f"{fig}/speedup/{variant}/{method}/{dist}/d{d_h}/{mb}MB",
+                        r.t_parallel_model_s * 1e6,
+                        f"speedup={s:.2f};t_seq_us={t_seq*1e6:.0f}",
+                    )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: timing, CSV output, size/distribution grids.
+
+Paper sizes are 10–60 MB of int32 (2.62M–15.7M elements).  The default
+grid is scaled down (see ``--paper`` in run.py) because this container has
+ONE CPU core — full-size runs are supported but slow.  Every benchmark
+prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.distributions import DISTRIBUTIONS, elements_for_mb
+
+SMALL_SIZES_MB = (1, 2, 4)
+PAPER_SIZES_MB = (10, 20, 30, 40, 50, 60)
+DIMS = (1, 2, 3, 4)
+
+
+def sizes_mb(paper: bool):
+    return PAPER_SIZES_MB if paper else SMALL_SIZES_MB
+
+
+def time_call(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time in seconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def n_for_mb(mb: int) -> int:
+    return elements_for_mb(mb)

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure family.
+
+``PYTHONPATH=src python -m benchmarks.run [--paper] [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV.  ``--paper`` uses the paper's
+exact 10–60 MB sizes (slow on this 1-core container); the default grid is
+1–4 MB with identical structure.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import (
+    bench_commsteps,
+    bench_counters,
+    bench_efficiency,
+    bench_kernels,
+    bench_moe_dispatch,
+    bench_parallel,
+    bench_sequential,
+    bench_speedup,
+)
+
+SUITES = {
+    "sequential": lambda paper: bench_sequential.run(paper),  # Fig 6.1
+    "parallel": lambda paper: bench_parallel.run(paper),  # Figs 6.2/6.3
+    "speedup_full": lambda paper: bench_speedup.run(paper, "full"),  # 6.4–6.7
+    "speedup_half": lambda paper: bench_speedup.run(paper, "half"),  # 6.8–6.11
+    "efficiency_full": lambda paper: bench_efficiency.run(paper, "full"),  # 6.12–15
+    "efficiency_half": lambda paper: bench_efficiency.run(paper, "half"),  # 6.16–19
+    "counters": lambda paper: bench_counters.run(paper),  # 6.20–6.24
+    "commsteps": lambda paper: bench_commsteps.run(paper),  # Theorem 3
+    "kernels": lambda paper: bench_kernels.run(paper),
+    "moe_dispatch": lambda paper: bench_moe_dispatch.run(paper),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="paper-exact 10-60MB sizes")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.paper)
+
+
+if __name__ == "__main__":
+    main()

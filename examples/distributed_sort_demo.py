@@ -1,0 +1,53 @@
+"""Distributed sort over a real device mesh (8 simulated devices).
+
+Shows all three methods — 'paper' (equal-width ranges), 'sample'
+(balanced splitters), 'hier' (two-level pod-aware exchange) — and the
+output contract: shard-balanced globally sorted distribution.
+
+NOTE: sets XLA_FLAGS before importing jax — run as its own process:
+    PYTHONPATH=src python examples/distributed_sort_demo.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dist_sort, host_check_globally_sorted
+from repro.data.distributions import make_array
+
+
+def main():
+    n = 1 << 15
+    auto = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((8,), ("data",), axis_types=auto)
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=auto * 2)
+
+    for dist in ("random", "local"):
+        x = make_array(dist, n, seed=7)
+        for method, m, axes in (
+            ("paper", mesh, ("data",)),
+            ("sample", mesh, ("data",)),
+            ("hier", mesh2, ("pod", "data")),
+        ):
+            v, c = dist_sort(jnp.asarray(x), mesh=m, axis_names=axes,
+                             method=method, capacity_factor=8.0)
+            counts = np.asarray(c).ravel()
+            ok = host_check_globally_sorted(np.asarray(v), counts)
+            shipped = counts.sum()
+            imb = counts.max() / max(counts.mean(), 1e-9)
+            print(f"{dist:7s} {method:7s} sorted={ok} kept={shipped}/{n} "
+                  f"shard imbalance={imb:.2f}"
+                  + ("  <- equal-width ranges collapse on clustered values"
+                     if method == "paper" and dist == "local" else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""The paper's technique inside an ML model: sort-based MoE dispatch.
+
+Shows routing-as-bucket-sort: top-k expert choice → bucket histogram +
+stable ranks (the Array Division Procedure with SubDivider=1) → contiguous
+(expert, capacity) buffer → grouped FFN → weighted combine; verified
+against the dense one-hot oracle.
+
+    PYTHONPATH=src python examples/moe_dispatch_demo.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import partition
+from repro.models import moe as MOE
+from repro.models.common import NO_SHARD
+
+
+def main():
+    cfg = ModelConfig(
+        family="moe", d_model=64, dtype=jnp.float32, param_dtype=jnp.float32,
+        moe=MoEConfig(num_experts=8, num_experts_per_tok=2, expert_d_ff=128,
+                      dispatch="sorted", capacity_factor=2.0),
+    )
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64), jnp.float32)
+
+    # peek at the routing-as-bucketing internals
+    top_p, top_e, aux = MOE._router(p, x, cfg)
+    flat = top_e.reshape(-1)
+    counts = partition.bucket_counts(flat, 8)
+    print("expert bucket populations:", np.asarray(counts),
+          f"(aux load-balance loss {float(aux):.4f})")
+
+    y_sorted, _ = MOE.apply_moe(p, x, cfg, NO_SHARD)
+    cfg_dense = cfg.replace(moe=MoEConfig(num_experts=8, num_experts_per_tok=2,
+                                          expert_d_ff=128, dispatch="dense"))
+    y_dense, _ = MOE.apply_moe(p, x, cfg_dense, NO_SHARD)
+    err = float(jnp.max(jnp.abs(y_sorted - y_dense)))
+    print(f"sorted dispatch vs dense oracle: max |Δ| = {err:.2e}")
+    assert err < 1e-4
+
+
+if __name__ == "__main__":
+    main()

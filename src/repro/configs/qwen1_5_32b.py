@@ -1,0 +1,28 @@
+"""qwen1.5-32b [dense; hf:Qwen/Qwen1.5-*]: 64L, d=5120, 40H (MHA kv=40),
+d_ff=27392, vocab=152064, QKV bias."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=40,
+        head_dim=128,
+        d_ff=27392,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1e6,
+        max_seq_len=32768 + 8,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, max_seq_len=128, attn_chunk=32,
+    )

@@ -1,0 +1,99 @@
+"""Architecture registry: ``--arch <id>`` → config, model API, input specs.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of that (arch × shape) cell — weak-type-correct,
+shardable, zero allocation — exactly what ``jit(...).lower()`` wants for
+the multi-pod dry-run.  Modality frontends are stubs per the assignment:
+whisper gets frame embeddings, qwen2-vl gets patch embeddings + M-RoPE
+position ids.
+
+``cell_supported(arch, shape)`` encodes the assignment's skip rules:
+* ``long_500k`` only for sub-quadratic attention (mamba2, zamba2, mixtral
+  SWA, gemma3 local:global) — pure full-attention archs skip it;
+* whisper decodes against its (stubbed) encoder context.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS: dict[str, str] = {
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+# archs with sub-quadratic (or windowed/local) attention → run long_500k
+LONG_CONTEXT_OK = {"mamba2-370m", "zamba2-2.7b", "mixtral-8x22b", "gemma3-4b"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def get_model_api(cfg: ModelConfig):
+    """→ module with init/forward/(init_cache/prefill/decode_step)/param_specs."""
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        return encdec
+    from repro.models import lm
+
+    return lm
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: long_500k skipped per assignment"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]
+
+
+def supported_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a, s in all_cells() if cell_supported(a, s)[0]]
+
+
+# --------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the *batch* argument of train/prefill/decode."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), tok), "labels": _sds((B, S), tok)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), tok)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": _sds((B, 1), tok)}
+    if cfg.family == "encdec":
+        specs["enc_frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        specs.pop("labels", None)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), tok)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        specs["positions_thw"] = _sds((3, B, S), tok)
+    return specs
+
+
+def shape_for(name: str) -> ShapeConfig:
+    return SHAPES[name]

@@ -1,0 +1,53 @@
+"""Core: the paper's contribution — parallel Quick Sort on the OHHC.
+
+Modules: topology (OHHC graph), schedule (3-phase accumulation + Theorem-3
+accounting), partition (Array Division Procedure + balanced splitters),
+ohhc_sort (paper-faithful sort + counters + cost model), sample_sort
+(beyond-paper models), dist_sort (shard_map mesh implementation).
+"""
+
+from repro.core.topology import OHHCTopology, table_1_1, HHC_SIZE
+from repro.core.schedule import AccumulationSchedule, payload_bytes_per_round
+from repro.core.partition import (
+    paper_bucket_ids,
+    sampled_splitters,
+    splitter_bucket_ids,
+    bucket_counts,
+    bucket_ranks,
+    scatter_to_buckets,
+    unscatter,
+)
+from repro.core.ohhc_sort import (
+    LinkModel,
+    ohhc_sort_sim,
+    ohhc_sort_host,
+    quicksort_counters,
+    parallel_quicksort_counters,
+    bitonic_counters,
+    model_comm_time_s,
+)
+from repro.core.dist_sort import dist_sort, host_check_globally_sorted
+
+__all__ = [
+    "OHHCTopology",
+    "table_1_1",
+    "HHC_SIZE",
+    "AccumulationSchedule",
+    "payload_bytes_per_round",
+    "paper_bucket_ids",
+    "sampled_splitters",
+    "splitter_bucket_ids",
+    "bucket_counts",
+    "bucket_ranks",
+    "scatter_to_buckets",
+    "unscatter",
+    "LinkModel",
+    "ohhc_sort_sim",
+    "ohhc_sort_host",
+    "quicksort_counters",
+    "parallel_quicksort_counters",
+    "bitonic_counters",
+    "model_comm_time_s",
+    "dist_sort",
+    "host_check_globally_sorted",
+]

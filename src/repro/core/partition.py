@@ -1,0 +1,136 @@
+"""Array Division Procedure (§3.1) + beyond-paper balanced splitters.
+
+The paper routes element ``v`` to bucket ``⌊(v − min) / SubDivider⌋`` with
+``SubDivider = (max − min) / P``.  (The paper's formula omits the ``− min``
+shift; without it, any array whose minimum is far from 0 lands every
+element in a handful of buckets, so we include the shift — the obvious
+intended semantics.)  This is *range partitioning*: bucket i's values are
+all ≤ bucket i+1's, hence concatenation after per-bucket sorting is sorted
+with **no merge step** — the paper's central trick.
+
+Weakness the paper itself measures (its "local distribution" runs reach
+only ~10% speedup): equal-width value ranges collapse under skew.  The
+beyond-paper fix is classic sample sort: take an oversampled random/strided
+sample, sort it, use its quantiles as splitters.  Bucket population is then
+balanced to within a provable factor regardless of the value distribution.
+
+Everything here is pure ``jnp`` and jit-safe; the Pallas kernel twins live
+in ``repro.kernels`` (bucket histogram/rank via one-hot MXU matmul).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paper_bucket_ids(x: jax.Array, num_buckets: int) -> jax.Array:
+    """§3.1: equal-width value-range bucket ids in ``[0, num_buckets)``."""
+    x = jnp.asarray(x)
+    lo = jnp.min(x).astype(jnp.float64 if x.dtype == jnp.int64 else jnp.float32)
+    hi = jnp.max(x).astype(lo.dtype)
+    width = (hi - lo) / num_buckets
+    # Degenerate constant array → everything in bucket 0 (paper leaves this
+    # implicit; division by zero would occur otherwise).
+    safe_width = jnp.where(width > 0, width, 1.0)
+    ids = jnp.floor((x.astype(lo.dtype) - lo) / safe_width).astype(jnp.int32)
+    return jnp.clip(ids, 0, num_buckets - 1)
+
+
+def sampled_splitters(
+    x: jax.Array, num_buckets: int, *, oversample: int = 32, key: jax.Array | None = None
+) -> jax.Array:
+    """Beyond-paper: ``num_buckets − 1`` splitters from an oversampled sample.
+
+    Deterministic strided sampling by default (reproducible, collective-free
+    when used per-shard); pass ``key`` for random sampling.
+    """
+    x = jnp.asarray(x).ravel()
+    n = x.shape[0]
+    s = min(n, max(num_buckets * oversample, num_buckets))
+    if key is not None:
+        idx = jax.random.randint(key, (s,), 0, n)
+        sample = x[idx]
+    else:
+        # ceil-stride so the strided sample spans the WHOLE array (a floor
+        # stride + truncation would sample only the head — catastrophic for
+        # sorted inputs).
+        stride = -(-n // s)
+        sample = x[::stride]
+    sample = jnp.sort(sample)
+    # splitter i = quantile (i+1)/num_buckets of the sample
+    pos = (jnp.arange(1, num_buckets) * sample.shape[0]) // num_buckets
+    return sample[pos]
+
+
+def splitter_bucket_ids(x: jax.Array, splitters: jax.Array) -> jax.Array:
+    """Bucket ids via searchsorted on sorted splitters (len = buckets − 1)."""
+    return jnp.searchsorted(splitters, jnp.asarray(x), side="right").astype(jnp.int32)
+
+
+def bucket_counts(bucket_ids: jax.Array, num_buckets: int) -> jax.Array:
+    """Histogram of bucket ids, shape (num_buckets,) int32."""
+    return jnp.zeros(num_buckets, jnp.int32).at[bucket_ids].add(1)
+
+
+def bucket_ranks(bucket_ids: jax.Array, num_buckets: int) -> jax.Array:
+    """Rank of each element within its bucket (stable, order-of-appearance).
+
+    rank[i] = #{j < i : bucket_ids[j] == bucket_ids[i]}.  Implemented as a
+    cumulative sum over the one-hot bucket matrix — the same formulation the
+    Pallas ``partition_kernel`` computes with an MXU matmul.
+    """
+    one_hot = jax.nn.one_hot(bucket_ids, num_buckets, dtype=jnp.int32)
+    # exclusive cumsum along the element axis
+    csum = jnp.cumsum(one_hot, axis=0) - one_hot
+    return jnp.take_along_axis(csum, bucket_ids[:, None], axis=1)[:, 0]
+
+
+def scatter_to_buckets(
+    x: jax.Array,
+    bucket_ids: jax.Array,
+    num_buckets: int,
+    capacity: int,
+    *,
+    fill_value=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter elements into a dense (num_buckets, capacity) buffer.
+
+    Returns (buckets, counts).  Elements beyond ``capacity`` in a bucket are
+    dropped (jit-safe static shape); ``counts`` is CLIPPED to capacity so it
+    reflects what was actually stored — overflow is therefore detectable as
+    ``counts.sum() < x.size`` (callers raise/retry; see dist_sort docs).
+    ``fill_value`` defaults to the dtype max so padded tails sort to the end.
+    """
+    x = jnp.asarray(x).ravel()
+    if fill_value is None:
+        fill_value = (
+            jnp.iinfo(x.dtype).max
+            if jnp.issubdtype(x.dtype, jnp.integer)
+            else jnp.inf
+        )
+    ranks = bucket_ranks(bucket_ids, num_buckets)
+    counts = jnp.minimum(bucket_counts(bucket_ids, num_buckets), capacity)
+    keep = ranks < capacity
+    flat_idx = jnp.where(keep, bucket_ids * capacity + ranks, num_buckets * capacity)
+    out = jnp.full(num_buckets * capacity + 1, fill_value, x.dtype)
+    out = out.at[flat_idx].set(x)[:-1]
+    return out.reshape(num_buckets, capacity), counts
+
+
+def unscatter(
+    buckets: jax.Array, counts: jax.Array, total: int
+) -> jax.Array:
+    """Concatenate bucket prefixes (bucket order) into a flat array of ``total``.
+
+    Because buckets are range-partitioned and individually sorted, the
+    result is globally sorted — §3.1's merge-free gather.
+    """
+    num_buckets, capacity = buckets.shape
+    offsets = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos_in_bucket = jnp.arange(capacity)[None, :]
+    valid = pos_in_bucket < counts[:, None]
+    dest = jnp.where(valid, offsets[:, None] + pos_in_bucket, total)
+    out = jnp.zeros(total + 1, buckets.dtype)
+    out = out.at[dest.ravel()].set(buckets.ravel())
+    return out[:total]

@@ -1,0 +1,4 @@
+from repro.data.pipeline import SyntheticLMData
+from repro.data.distributions import make_array
+
+__all__ = ["SyntheticLMData", "make_array"]

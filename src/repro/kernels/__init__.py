@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's per-processor hot loop is the local sort; its partition step
+is the bucket histogram/scatter.  TPU-native equivalents (DESIGN.md §2):
+
+* ``bitonic``          — in-VMEM bitonic sort / pair-sort / two-tile merge
+                         (reshape-based compare-exchange, zero gathers)
+* ``partition_kernel`` — bucket histogram + stable ranks (one-hot form,
+                         sequential-grid running offsets)
+* ``ops``              — jit'd wrappers (interpret=True on CPU)
+* ``ref``              — pure-jnp oracles for the allclose tests
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

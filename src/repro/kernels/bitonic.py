@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: in-VMEM bitonic sort (the local-sort hot spot).
+
+Hardware adaptation (DESIGN.md §2): the paper's per-processor *sequential
+Quick Sort* is branch-heavy and pointer-chasing — dead on a vector unit.
+The TPU-native equivalent is a **bitonic sorting network**: the
+compare-exchange pattern is a pure function of the index, so every stage is
+a full-width VPU op on a VMEM-resident tile.
+
+Key implementation trick — *reshape-based compare-exchange, zero gathers*:
+a stage at distance ``d`` pairs index ``i`` with ``i ⊕ d``.  Viewing the
+flat array as ``(N/2d, 2, d)``, the two partners are the two slices of the
+middle axis, and the ascending/descending direction of block ``s`` depends
+only on the leading-axis index — everything is reshapes, ``min``/``max``
+and a broadcast ``where``.  No scatter/gather units touched.
+
+Kernels
+-------
+* ``bitonic_sort_kernel``        — sort one VMEM tile of 2**k keys.
+* ``bitonic_sort_pairs_kernel``  — sort (key, payload) pairs (used by the
+  MoE dispatch: payload = token index).
+* ``bitonic_merge_kernel``       — merge two sorted tiles (concat with one
+  reversed = bitonic sequence → log(2L) merge stages).  ``ops.local_sort``
+  composes grid-tiled sorts with a pairwise merge tree for inputs larger
+  than one tile.
+
+Tiles are 2-D ``(rows, 128)`` — lane-dim 128 keeps every stage aligned to
+the VPU registers; rows ≤ 8192 keeps a tile ≤ 4 MiB (f32) ≪ 16 MiB VMEM.
+All kernels are validated against ``ref.py`` in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _log2(n: int) -> int:
+    k = n.bit_length() - 1
+    if 1 << k != n:
+        raise ValueError(f"{n} is not a power of two")
+    return k
+
+
+def _compare_exchange(x: jax.Array, s: int, j: int) -> jax.Array:
+    """One bitonic stage on flat ``x`` (N=2**k): block 2**(s+1), distance 2**j."""
+    n = x.shape[0]
+    d = 1 << j
+    y = x.reshape(n // (2 * d), 2, d)
+    a, b = y[:, 0, :], y[:, 1, :]
+    q = jnp.arange(n // (2 * d), dtype=jnp.int32)
+    asc = (((q >> (s - j)) & 1) == 0)[:, None]
+    mn, mx = jnp.minimum(a, b), jnp.maximum(a, b)
+    lo = jnp.where(asc, mn, mx)
+    hi = jnp.where(asc, mx, mn)
+    return jnp.stack([lo, hi], axis=1).reshape(n)
+
+
+def _compare_exchange_pairs(k: jax.Array, v: jax.Array, s: int, j: int):
+    """Stage moving payload ``v`` with its key ``k`` (swap-mask formulation)."""
+    n = k.shape[0]
+    d = 1 << j
+    ky = k.reshape(n // (2 * d), 2, d)
+    vy = v.reshape(n // (2 * d), 2, d)
+    ka, kb = ky[:, 0, :], ky[:, 1, :]
+    va, vb = vy[:, 0, :], vy[:, 1, :]
+    q = jnp.arange(n // (2 * d), dtype=jnp.int32)
+    asc = (((q >> (s - j)) & 1) == 0)[:, None]
+    swap = jnp.where(asc, ka > kb, ka < kb)
+    k_lo = jnp.where(swap, kb, ka)
+    k_hi = jnp.where(swap, ka, kb)
+    v_lo = jnp.where(swap, vb, va)
+    v_hi = jnp.where(swap, va, vb)
+    return (
+        jnp.stack([k_lo, k_hi], axis=1).reshape(n),
+        jnp.stack([v_lo, v_hi], axis=1).reshape(n),
+    )
+
+
+def _sort_network(x: jax.Array) -> jax.Array:
+    kbits = _log2(x.shape[0])
+    for s in range(kbits):
+        for j in range(s, -1, -1):
+            x = _compare_exchange(x, s, j)
+    return x
+
+
+def _merge_network(x: jax.Array) -> jax.Array:
+    """Final merge phase only: x must already be bitonic (e.g. sorted↑ ++ sorted↓)."""
+    kbits = _log2(x.shape[0])
+    s = kbits - 1
+    for j in range(s, -1, -1):
+        x = _compare_exchange(x, s, j)
+    return x
+
+
+# ----------------------------------------------------------------- kernels
+def bitonic_sort_kernel(x_ref, o_ref):
+    n = x_ref.shape[0] * x_ref.shape[1]
+    o_ref[...] = _sort_network(x_ref[...].reshape(n)).reshape(x_ref.shape)
+
+
+def bitonic_sort_pairs_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    n = k_ref.shape[0] * k_ref.shape[1]
+    keys, vals = k_ref[...].reshape(n), v_ref[...].reshape(n)
+    kbits = _log2(n)
+    for s in range(kbits):
+        for j in range(s, -1, -1):
+            keys, vals = _compare_exchange_pairs(keys, vals, s, j)
+    ok_ref[...] = keys.reshape(k_ref.shape)
+    ov_ref[...] = vals.reshape(v_ref.shape)
+
+
+def bitonic_merge_kernel(a_ref, b_ref, lo_ref, hi_ref):
+    """Merge two sorted tiles a,b → (lo, hi) sorted halves of their union."""
+    n = a_ref.shape[0] * a_ref.shape[1]
+    a = a_ref[...].reshape(n)
+    b = b_ref[...].reshape(n)[::-1]  # reversed: a ++ rev(b) is bitonic
+    merged = _merge_network(jnp.concatenate([a, b]))
+    lo_ref[...] = merged[:n].reshape(a_ref.shape)
+    hi_ref[...] = merged[n:].reshape(a_ref.shape)
+
+
+# ------------------------------------------------------------ pallas_call
+def _tile_shape(n: int) -> tuple[int, int]:
+    if n % LANES:
+        raise ValueError(f"n={n} must be a multiple of {LANES}")
+    return (n // LANES, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_tile(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Sort one power-of-two tile (flat) entirely in VMEM."""
+    n = x.shape[0]
+    shape = _tile_shape(n)
+    x2 = x.reshape(shape)
+    out = pl.pallas_call(
+        bitonic_sort_kernel,
+        out_shape=jax.ShapeDtypeStruct(shape, x.dtype),
+        in_specs=[pl.BlockSpec(shape, lambda: (0, 0))],
+        out_specs=pl.BlockSpec(shape, lambda: (0, 0)),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_pairs_tile(keys: jax.Array, vals: jax.Array, *, interpret: bool = False):
+    n = keys.shape[0]
+    shape = _tile_shape(n)
+    ok, ov = pl.pallas_call(
+        bitonic_sort_pairs_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(shape, keys.dtype),
+            jax.ShapeDtypeStruct(shape, vals.dtype),
+        ),
+        in_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
+        out_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
+        interpret=interpret,
+    )(keys.reshape(shape), vals.reshape(shape))
+    return ok.reshape(n), ov.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_tiles(a: jax.Array, b: jax.Array, *, interpret: bool = False):
+    """Merge two sorted equal-length tiles → (lo, hi)."""
+    n = a.shape[0]
+    shape = _tile_shape(n)
+    lo, hi = pl.pallas_call(
+        bitonic_merge_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(shape, a.dtype),
+            jax.ShapeDtypeStruct(shape, a.dtype),
+        ),
+        in_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
+        out_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
+        interpret=interpret,
+    )(a.reshape(shape), b.reshape(shape))
+    return lo.reshape(n), hi.reshape(n)

@@ -1,0 +1,100 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the
+kernel body executes in Python for correctness validation; on TPU they
+compile to Mosaic.  ``interpret=None`` auto-detects.
+
+``local_sort`` handles arbitrary lengths: pad → power-of-two tiles →
+in-VMEM bitonic sort per tile → **merge-splitting network** across tiles
+(odd-even transposition over sorted blocks with the two-tile bitonic merge
+as the comparator — a classic block-sorting network, correct for any
+number of tiles in ``num_tiles`` passes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic
+from repro.kernels.partition_kernel import bucket_count_rank as _bcr
+
+# One tile ≤ 2**19 f32 = 2 MiB: tile + the network's temporaries stay well
+# under the 16 MiB VMEM budget.
+MAX_TILE = 1 << 19
+MIN_TILE = bitonic.LANES  # 128
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _fill_value(dtype):
+    return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else jnp.array(
+        jnp.inf, dtype
+    )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max((n - 1).bit_length(), 0)
+
+
+def local_sort(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Sort a flat array with the bitonic kernel(s).  Returns same length."""
+    interpret = _auto_interpret(interpret)
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    n_pad = max(_next_pow2(n), MIN_TILE)
+    xp = jnp.concatenate([x, jnp.full((n_pad - n,), _fill_value(x.dtype), x.dtype)])
+    if n_pad <= MAX_TILE:
+        return bitonic.sort_tile(xp, interpret=interpret)[:n]
+    # ---- multi-tile: sort tiles, then merge-splitting passes
+    num_tiles = n_pad // MAX_TILE
+    tiles = [
+        bitonic.sort_tile(xp[i * MAX_TILE : (i + 1) * MAX_TILE], interpret=interpret)
+        for i in range(num_tiles)
+    ]
+    for _ in range(num_tiles):  # odd-even transposition over blocks
+        for start in (0, 1):
+            for i in range(start, num_tiles - 1, 2):
+                lo, hi = bitonic.merge_tiles(tiles[i], tiles[i + 1], interpret=interpret)
+                tiles[i], tiles[i + 1] = lo, hi
+    return jnp.concatenate(tiles)[:n]
+
+
+def local_sort_pairs(
+    keys: jax.Array, vals: jax.Array, *, interpret: bool | None = None
+):
+    """Sort (key, payload) pairs by key.  Single-tile sizes (≤ MAX_TILE)."""
+    interpret = _auto_interpret(interpret)
+    n = keys.shape[0]
+    n_pad = max(_next_pow2(n), MIN_TILE)
+    if n_pad > MAX_TILE:
+        raise ValueError(f"local_sort_pairs supports n ≤ {MAX_TILE}, got {n}")
+    kp = jnp.concatenate(
+        [keys, jnp.full((n_pad - n,), _fill_value(keys.dtype), keys.dtype)]
+    )
+    vp = jnp.concatenate([vals, jnp.zeros((n_pad - n,), vals.dtype)])
+    ks, vs = bitonic.sort_pairs_tile(kp, vp, interpret=interpret)
+    return ks[:n], vs[:n]
+
+
+def bucket_count_rank(
+    ids: jax.Array,
+    num_buckets: int,
+    *,
+    tile: int = 1024,
+    interpret: bool | None = None,
+):
+    """Histogram + stable in-bucket ranks (see partition_kernel)."""
+    return _bcr(ids, num_buckets, tile=tile, interpret=_auto_interpret(interpret))
+
+
+def make_local_sort(interpret: bool | None = None):
+    """A partial suitable as the ``local_sort=`` argument of the core sorts."""
+    return functools.partial(local_sort, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_sort(x: jax.Array) -> jax.Array:
+    return jnp.sort(x)
+
+
+def ref_sort_pairs(keys: jax.Array, vals: jax.Array):
+    """Stable sort of (key, payload) pairs by key."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def ref_merge(a: jax.Array, b: jax.Array):
+    """Merge two sorted arrays → (lo, hi) sorted halves of the union."""
+    m = jnp.sort(jnp.concatenate([a, b]))
+    return m[: a.shape[0]], m[a.shape[0] :]
+
+
+def ref_bucket_count_rank(ids: jax.Array, num_buckets: int):
+    counts = jnp.zeros(num_buckets, jnp.int32).at[ids].add(1)
+    onehot = jax.nn.one_hot(ids, num_buckets, dtype=jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    ranks = jnp.take_along_axis(excl, ids[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return counts, ranks

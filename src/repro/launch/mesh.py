@@ -1,0 +1,29 @@
+"""Production meshes.  A FUNCTION (not a module constant) so importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=256 chips single pod; (2,16,16)=512 chips across 2 pods.
+
+    The ``pod`` axis is the OTIS "optical" tier of the paper's topology:
+    every schedule in this framework is arranged to cross it once
+    (hierarchical dispatch, hierarchical psum, two-level sort exchange).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh(devices=None):
+    """Whatever devices exist, as a 1-D 'data' mesh (CI / laptop)."""
+    devices = devices if devices is not None else jax.devices()
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devices), ("data",))

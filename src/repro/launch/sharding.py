@@ -1,0 +1,158 @@
+"""Sharding-spec assembly for the dry-run and real launches.
+
+Everything here operates on *logical* PartitionSpecs (axis names) plus the
+concrete mesh, producing sanitized NamedShardings:
+
+* ``sanitize_specs``: drop mesh axes that don't divide the corresponding
+  array dim (e.g. whisper's vocab 51865 on a 16-way tensor axis, or
+  qwen1.5-32b's 40 heads).  jit in/out shardings must divide evenly;
+  the dropped axes simply mean that tensor is replicated on that axis —
+  correct, just less sharded (the roofline section reports the cost).
+* per-(arch × shape) ``AxisRules``: batch axes, FSDP, TP, and the special
+  cases — SP (sequence sharding) for head counts indivisible by TP, and
+  ``kv_seq`` sharding for the batch=1 ``long_500k`` decode cache.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import AxisRules
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> AxisRules:
+    sizes = mesh_axis_sizes(mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    tp = sizes.get("model", 1)
+    heads = "_default"  # resolves to the tensor axis
+    seq = None
+    # SP fallback: if H or KV heads don't divide the TP axis, shard the
+    # sequence dim of activations instead (context parallelism).
+    if cfg.num_heads % tp or (cfg.num_kv_heads and cfg.num_kv_heads % tp):
+        heads = None
+        if shape.seq_len % tp == 0 and shape.kind != "decode":
+            seq = "model"
+    kv_seq = None
+    if shape.kind in ("decode", "prefill"):
+        # KV heads that don't divide TP would replicate the cache across the
+        # model axis — shard the cache's seq dim there instead.
+        if cfg.num_kv_heads and cfg.num_kv_heads % tp:
+            kv_seq = "model"
+    if shape.kind == "decode":
+        # global batch must cover the batch axes; if not, shard the cache's
+        # sequence dim over the leftover axes (long_500k: batch=1).
+        bsz = int(np.prod([sizes[a] for a in batch_axes])) if batch_axes else 1
+        if shape.global_batch % bsz or shape.global_batch < bsz:
+            batch_axes = ()
+            kv_seq = ("data", "model") if cfg.num_kv_heads % tp else "data"
+    return AxisRules(
+        batch=batch_axes or None,
+        fsdp="data",
+        tensor="model",
+        heads=heads,
+        seq=seq,
+        kv_seq=kv_seq,
+    )
+
+
+# ---------------------------------------------------------------- sanitize
+def _shape_tree(tree):
+    return jax.tree.map(lambda x: tuple(x.shape), tree)
+
+
+def sanitize_specs(spec_tree, shaped_tree, mesh: Mesh):
+    """Drop spec axes that don't evenly divide the array dims."""
+    sizes = mesh_axis_sizes(mesh)
+
+    def axis_size(entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for e in entry:
+                n *= sizes.get(e, 1)
+            return n
+        return sizes.get(entry, 1)
+
+    def fix(spec, arr):
+        if not isinstance(spec, P):
+            return spec
+        shape = arr.shape if hasattr(arr, "shape") else tuple(arr)
+        entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+        out = []
+        for dim, entry in zip(shape, entries):
+            out.append(entry if entry and dim % axis_size(entry) == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(
+        fix, spec_tree, shaped_tree, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# --------------------------------------------------------------- batch spec
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules) -> dict:
+    b = rules.batch
+    specs = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(b, None)
+    if cfg.family == "encdec":
+        specs["enc_frames"] = P(b, None, None)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = P(b, None, None)
+        specs["positions_thw"] = P(None, b, None)
+    return specs
+
+
+# --------------------------------------------------------------- cache spec
+def cache_specs(cfg: ModelConfig, rules: AxisRules, cache_shapes) -> dict:
+    """PartitionSpec tree matching the model's cache pytree.
+
+    GQA KV: (L, B, S, KV, hd) → (None, batch, kv_seq, heads, None)
+    MLA latent: c (L,B,S,r), kr (L,B,S,dr) → (None, batch, kv_seq, None)
+    SSM: conv (L,B,W,C) → (None, batch, None, tensor);
+         ssm (L,B,nh,hd,ds) → (None, batch, tensor, None, None)
+    hybrid adds shared (periods, B, S, KV, hd).
+    """
+    r = rules
+
+    def kv5(_):
+        return r.spec(None, "batch", "kv_seq", "heads", None)
+
+    if cfg.family == "ssm" or cfg.is_hybrid:
+        specs = {
+            "layers": {
+                "conv": r.spec(None, "batch", None, "tensor"),
+                "ssm": r.spec(None, "batch", "tensor", None, None),
+            }
+        }
+        if cfg.is_hybrid:
+            specs["shared"] = (kv5(None), kv5(None))
+        return specs
+    if cfg.mla.kv_lora_rank:
+        return {
+            "layers": {
+                "c": r.spec(None, "batch", "kv_seq", None),
+                "kr": r.spec(None, "batch", "kv_seq", None),
+            }
+        }
+    if cfg.family == "encdec":
+        return {"self": (kv5(None), kv5(None)), "cross": (kv5(None), kv5(None))}
+    if cfg.decode_window_cache:
+        # ring cache: (L, B, ring, KV, hd) ×2 + (L, ring) positions
+        return {"layers": (kv5(None), kv5(None), P(None, None))}
+    return {"layers": (kv5(None), kv5(None))}

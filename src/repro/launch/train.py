@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [k=v ...]``.
+
+Runs the real Trainer (checkpoint/restart, straggler watchdog) on whatever
+devices exist.  On this CPU container use ``--smoke`` for the reduced
+config; on a TPU fleet drop the flag and set ``--mesh`` axes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models.common import NO_SHARD
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ARCHS))
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, smoke=args.smoke)
+    api = registry.get_model_api(cfg)
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("cli", args.seq, args.batch, "train"),
+        learning_rate=args.lr,
+        total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+        grad_compression=args.grad_compression,
+    )
+    tr = Trainer(cfg, run, api, rules=NO_SHARD)
+    print(f"training {cfg.name} ({sum(x.size for x in jax.tree.leaves(tr.state['params'])):,} params) "
+          f"for {args.steps} steps on {len(jax.devices())} device(s)")
+    log = tr.run_steps(args.steps)
+    print(f"loss: {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f}; "
+          f"stragglers={len(tr.straggler_steps)} restarts={tr.restarts}")
+
+
+if __name__ == "__main__":
+    main()

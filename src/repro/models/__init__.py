@@ -1,0 +1,6 @@
+"""Model substrate: dense/MoE/MLA/SSM/hybrid/enc-dec/VLM in pure JAX.
+
+Every family exposes ``init / forward / prefill / decode / param_specs``
+through the builders in ``repro.models.lm`` (decoder LMs incl. MoE, MLA,
+SSM, hybrid, VLM) and ``repro.models.encdec`` (whisper).
+"""

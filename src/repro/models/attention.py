@@ -1,0 +1,161 @@
+"""Attention: GQA, per-layer windows (traced), KV-chunked online softmax.
+
+One implementation serves every attention flavour in the assigned archs:
+
+* full causal (qwen1.5, minitron, deepseek-q/k path, whisper decoder)
+* sliding window via a **traced** per-layer window scalar (mixtral SWA,
+  gemma3 5:1 local:global — a window of 0 means global), which lets the
+  layer stack stay homogeneous under ``lax.scan``
+* non-causal (whisper encoder) and cross attention (whisper decoder)
+* decode against a padded KV cache with a validity length
+
+Memory: scores are materialised per **KV chunk** only (``lax.scan`` with a
+running (max, sum, acc) online softmax — the flash-attention recurrence in
+pure JAX).  A 32k-token prefill therefore costs O(S · chunk) scores, not
+O(S²), and the scanned HLO stays one-chunk sized for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+RING_INVALID = -(1 << 30)  # kpos sentinel for never-written ring slots
+
+
+def _chunk_mask(
+    q_pos: jax.Array,  # (Sq,)
+    k_pos: jax.Array,  # (Ck,)
+    *,
+    causal: bool,
+    window,  # traced int32 or python int; 0/None → no window
+    kv_len=None,  # traced valid cache length (decode) or None
+):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        # w == 0 → global; else keys within the last w positions
+        win_ok = (q_pos[:, None] - k_pos[None, :]) < w
+        m &= jnp.where(w > 0, win_ok, True)
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,  # (B, Sk, KVH, hd_v)
+    *,
+    causal: bool = True,
+    window=None,
+    q_offset=0,  # traced or static start position of q within the sequence
+    kv_len=None,
+    chunk: int = 1024,
+    scale: float | None = None,
+    matmul_bf16: bool = False,
+    k_positions: jax.Array | None = None,  # explicit key positions (ring cache)
+) -> jax.Array:
+    """Online-softmax attention, GQA via head grouping.  Returns (B,Sq,H,hd_v).
+
+    ``matmul_bf16`` (§Perf lever): QKᵀ and P·V run in bf16 with f32
+    accumulation (MXU-native, half the operand traffic); softmax statistics
+    stay f32.  Baseline (False) is all-f32 — the numerics oracle.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KVH, G, hd)
+    q_mm = qf.astype(jnp.bfloat16) if matmul_bf16 else qf
+    q_pos = q_offset + jnp.arange(Sq)
+
+    chunk = min(chunk, Sk)
+    n_chunks = Sk // chunk
+    rem = Sk - n_chunks * chunk
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        kc, vc, start = inputs  # (B,C,KVH,hd), (B,C,KVH,hdv), ()
+        if k_positions is not None:
+            k_pos = jax.lax.dynamic_slice_in_dim(k_positions, start, kc.shape[1])
+        else:
+            k_pos = start + jnp.arange(kc.shape[1])
+        k_mm = kc.astype(jnp.bfloat16) if matmul_bf16 else kc.astype(jnp.float32)
+        s = jnp.einsum(
+            "bqkgh,bckh->bqkgc", q_mm, k_mm, preferred_element_type=jnp.float32
+        )  # (B,Sq,KVH,G,C) f32
+        mask = _chunk_mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        p_mm = p.astype(jnp.bfloat16) if matmul_bf16 else p
+        v_mm = vc.astype(jnp.bfloat16) if matmul_bf16 else vc.astype(jnp.float32)
+        pv = jnp.einsum(
+            "bqkgc,bckh->bqkgh", p_mm, v_mm, preferred_element_type=jnp.float32
+        )
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    hd_v = v.shape[-1]
+    init = (
+        jnp.full((B, Sq, KVH, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, Sq, KVH, G), jnp.float32),
+        jnp.zeros((B, Sq, KVH, G, hd_v), jnp.float32),
+    )
+    if n_chunks > 0:
+        ks = k[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, KVH, hd)
+        vs = v[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, KVH, hd_v)
+        starts = jnp.arange(n_chunks) * chunk
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            body,
+            init,
+            (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4), starts),
+        )
+        init = (m_run, l_run, acc)
+    if rem:
+        init, _ = body(
+            init, (k[:, n_chunks * chunk :], v[:, n_chunks * chunk :], n_chunks * chunk)
+        )
+    m_run, l_run, acc = init
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def attention_with_lse(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_len=None,
+    scale: float | None = None,
+):
+    """Decode attention returning (out, lse) for cross-shard combination.
+
+    Used by the sequence-sharded long-context decode: each shard attends to
+    its KV slice; partial results merge with the standard logsumexp rule:
+    out = Σ exp(lse_i − lse*)·out_i / Σ exp(lse_i − lse*).
+    """
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KVH, G, hd)
+    k_pos = jnp.arange(k.shape[1])
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qf, k.astype(jnp.float32))
+    if kv_len is not None:
+        s = jnp.where(k_pos[None, None, None, None, :] < kv_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    lse = m[..., 0] + jnp.log(jnp.maximum(l, 1e-30))
+    return out.reshape(B, Sq, H, v.shape[-1]), lse.reshape(B, Sq, H)

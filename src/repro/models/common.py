@@ -1,0 +1,134 @@
+"""Shared model utilities: init, sharding rules, scan/stack helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Logical→mesh axis mapping.  ``None`` fields disable that sharding.
+
+    batch:  activation batch dim (tuple of mesh axes, e.g. ('pod','data'))
+    fsdp:   weight shard axis (ZeRO-3 style)
+    tensor: tensor-parallel axis (heads / ffn / experts / vocab)
+    heads:  attention-head activation axis (defaults to tensor; set None and
+            set ``seq`` instead for sequence parallelism when head counts
+            don't divide the TP axis — e.g. qwen1.5-32b's 40 heads on TP16)
+    seq:    sequence activation axis (SP / context parallelism)
+    kv_seq: KV-cache sequence axis (long_500k: shard the 500k cache
+            over the data axis when batch=1 can't use it)
+    """
+
+    batch: tuple[str, ...] | None = ("pod", "data")
+    fsdp: str | None = "data"
+    tensor: str | None = "model"
+    heads: "str | None | object" = "_default"
+    seq: str | None = None
+    kv_seq: str | None = None
+    enabled: bool = True
+
+    def spec(self, *axes) -> P:
+        """PartitionSpec from logical names:
+        'batch'|'fsdp'|'tensor'|'heads'|'seq'|'kv_seq'|None|raw-mesh-axis."""
+        out = []
+        for a in axes:
+            if a == "batch":
+                out.append(self.batch)
+            elif a == "fsdp":
+                out.append(self.fsdp)
+            elif a == "tensor":
+                out.append(self.tensor)
+            elif a == "heads":
+                out.append(self.tensor if self.heads == "_default" else self.heads)
+            elif a == "seq":
+                out.append(self.seq)
+            elif a == "kv_seq":
+                out.append(self.kv_seq)
+            elif a is None:
+                out.append(None)
+            else:  # raw mesh axis name passthrough
+                out.append(a)
+        # a mesh axis may appear at most once per spec: first occurrence
+        # wins (SP mode maps seq→model, so tensor entries later in the same
+        # spec must drop to replicated).
+        seen: set = set()
+        dedup = []
+        for e in out:
+            names = (e,) if isinstance(e, str) else tuple(e or ())
+            if any(n in seen for n in names):
+                dedup.append(None)
+            else:
+                seen.update(names)
+                dedup.append(e)
+        return P(*dedup)
+
+
+NO_SHARD = AxisRules(batch=None, fsdp=None, tensor=None, enabled=False)
+
+
+def shard(x: jax.Array, rules: AxisRules, *axes) -> jax.Array:
+    """with_sharding_constraint if rules are enabled, else identity."""
+    if not rules.enabled:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.spec(*axes))
+
+
+# ----------------------------------------------------------------- init
+def dense_init(key, shape: Sequence[int], in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the boring, correct default)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else math.prod(
+        shape[a] for a in in_axis
+    )
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------------------------------------------- scan utils
+def stack_layers(layer_params: list):
+    """Stack a list of identical pytrees along a new leading (layer) axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def maybe_scan(body, init, xs, use_scan: bool = True):
+    """lax.scan, or an unrolled python loop over the leading axis.
+
+    The unrolled form exists for the dry-run's cost calibration: XLA's
+    cost_analysis counts a while-loop body ONCE regardless of trip count,
+    so per-layer FLOPs/bytes/collective traffic are extracted from small
+    *unrolled* lowers and scaled (launch/dryrun.py)."""
+    if use_scan:
+        return jax.lax.scan(body, init, xs)
+    carry = init
+    ys = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def prepend_none_spec(specs):
+    """Layer-stacked params get an unsharded leading axis."""
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))) if isinstance(s, P) else s,
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

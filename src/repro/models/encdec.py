@@ -1,0 +1,243 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed per spec).
+
+Encoder: precomputed frame embeddings (B, F, d) from ``input_specs`` +
+sinusoidal positions → non-causal self-attention stack (LayerNorm+GELU,
+whisper flavour).  Decoder: token embeddings + causal self-attn +
+cross-attn to the encoder output.  Embeddings are tied (whisper ties the
+decoder unembedding).
+
+Serving: the encoder runs once (its output K/V for every cross-attn layer
+is cached), decoder self-attn uses a standard padded KV cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import attention
+from repro.models.common import (
+    AxisRules,
+    NO_SHARD,
+    maybe_scan,
+    prepend_none_spec,
+    shard,
+    split_keys,
+    stack_layers,
+)
+from repro.models.lm import apply_attn_block, attn_specs, init_attn
+from repro.models.rope import sinusoidal_positions
+
+
+def _init_enc_block(key, cfg):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg),
+        "attn": init_attn(k1, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg),
+    }
+
+
+def _init_dec_block(key, cfg):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg),
+        "self_attn": init_attn(k1, cfg),
+        "ln_x": L.init_norm(cfg.d_model, cfg),
+        "cross_attn": init_attn(k2, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    keys = split_keys(key, cfg.encoder_layers + cfg.num_layers + 2)
+    return {
+        "embedding": L.init_embedding(keys[0], cfg),
+        "enc_blocks": stack_layers(
+            [_init_enc_block(keys[1 + i], cfg) for i in range(cfg.encoder_layers)]
+        ),
+        "enc_norm": L.init_norm(cfg.d_model, cfg),
+        "dec_blocks": stack_layers(
+            [
+                _init_dec_block(keys[1 + cfg.encoder_layers + i], cfg)
+                for i in range(cfg.num_layers)
+            ]
+        ),
+        "final_norm": L.init_norm(cfg.d_model, cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, rules: AxisRules, tp_size: int = 1):
+    enc = {
+        "ln1": L.norm_specs(cfg),
+        "attn": attn_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+    dec = {
+        "ln1": L.norm_specs(cfg),
+        "self_attn": attn_specs(cfg),
+        "ln_x": L.norm_specs(cfg),
+        "cross_attn": attn_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+    specs = {
+        "embedding": L.embedding_specs(cfg),
+        "enc_blocks": prepend_none_spec(enc),
+        "enc_norm": L.norm_specs(cfg),
+        "dec_blocks": prepend_none_spec(dec),
+        "final_norm": L.norm_specs(cfg),
+    }
+    return L.resolve_specs(specs, rules)
+
+
+def encode(params, frames, cfg, rules: AxisRules):
+    """frames: (B, F, d) stub embeddings."""
+    x = frames.astype(cfg.dtype) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model
+    ).astype(cfg.dtype)
+    x = shard(x, rules, "batch", "seq", None)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, blk):
+        h = L.apply_norm(blk["ln1"], x, cfg)
+        q, k, v = (
+            jnp.einsum("bsd,dhe->bshe", h, blk["attn"][w].astype(cfg.dtype))
+            for w in ("wq", "wk", "wv")
+        )
+        o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                      matmul_bf16=cfg.attn_matmul_bf16)
+        x = x + jnp.einsum(
+            "bshe,hed->bsd", o, blk["attn"]["wo"].astype(cfg.dtype)
+        )
+        h2 = L.apply_norm(blk["ln2"], x, cfg)
+        return x + L.apply_mlp(blk["mlp"], h2, cfg, rules), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body, x, params["enc_blocks"], cfg.scan_layers)
+    del positions
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_attend(blk, x, enc_kv, cfg, rules):
+    h = L.apply_norm(blk["ln_x"], x, cfg)
+    q = jnp.einsum("bsd,dhe->bshe", h, blk["cross_attn"]["wq"].astype(cfg.dtype))
+    ek, ev = enc_kv
+    o = attention(q, ek, ev, causal=False, chunk=cfg.attn_chunk,
+                  matmul_bf16=cfg.attn_matmul_bf16)
+    return x + jnp.einsum(
+        "bshe,hed->bsd", o, blk["cross_attn"]["wo"].astype(cfg.dtype)
+    )
+
+
+def _enc_kv(blk, enc_out, cfg):
+    ek = jnp.einsum("bsd,dhe->bshe", enc_out, blk["cross_attn"]["wk"].astype(cfg.dtype))
+    ev = jnp.einsum("bsd,dhe->bshe", enc_out, blk["cross_attn"]["wv"].astype(cfg.dtype))
+    return ek, ev
+
+
+def forward(params, batch, cfg: ModelConfig, rules: AxisRules = NO_SHARD):
+    """Training: batch = {'enc_frames': (B,F,d), 'tokens': (B,S)}."""
+    enc_out = encode(params, batch["enc_frames"], cfg, rules)
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg, rules)
+    S = batch["tokens"].shape[1]
+    pos_emb = sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)
+    x = x + pos_emb
+    positions = jnp.arange(S)
+
+    def body(x, blk):
+        h = L.apply_norm(blk["ln1"], x, cfg)
+        a, _ = apply_attn_block(
+            blk["self_attn"], h, cfg, rules, positions=positions, window=0,
+            theta=cfg.rope_theta,
+        )
+        x = x + a
+        x = _cross_attend(blk, x, _enc_kv(blk, enc_out, cfg), cfg, rules)
+        h2 = L.apply_norm(blk["ln2"], x, cfg)
+        return x + L.apply_mlp(blk["mlp"], h2, cfg, rules), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body, x, params["dec_blocks"], cfg.scan_layers)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg, rules)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    F = cfg.encoder_seq_len
+    Lc = cfg.num_layers
+    return {
+        "self": (
+            jnp.zeros((Lc, batch, max_len, KV, hd), dtype),
+            jnp.zeros((Lc, batch, max_len, KV, hd), dtype),
+        ),
+        "cross": (
+            jnp.zeros((Lc, batch, F, KV, hd), dtype),
+            jnp.zeros((Lc, batch, F, KV, hd), dtype),
+        ),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules: AxisRules, cache: dict):
+    """Encode + run the decoder prompt.  Returns (last logits, cache)."""
+    enc_out = encode(params, batch["enc_frames"], cfg, rules)
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg, rules)
+    S = batch["tokens"].shape[1]
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, blk):
+        h = L.apply_norm(blk["ln1"], x, cfg)
+        a, kv = apply_attn_block(
+            blk["self_attn"], h, cfg, rules, positions=positions, window=0,
+            theta=cfg.rope_theta,
+        )
+        x = x + a
+        ekv = _enc_kv(blk, enc_out, cfg)
+        x = _cross_attend(blk, x, ekv, cfg, rules)
+        h2 = L.apply_norm(blk["ln2"], x, cfg)
+        return x + L.apply_mlp(blk["mlp"], h2, cfg, rules), (kv, ekv)
+
+    x, (kvs, ekvs) = maybe_scan(body, x, params["dec_blocks"], cfg.scan_layers)
+    ck, cv = cache["self"]
+    ck = jax.lax.dynamic_update_slice(ck, kvs[0].astype(ck.dtype), (0, 0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, kvs[1].astype(cv.dtype), (0, 0, 0, 0, 0))
+    cache = {"self": (ck, cv), "cross": ekvs}
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x[:, -1:], cfg, rules)
+    return logits[:, 0], cache
+
+
+def decode_step(params, tokens, cfg: ModelConfig, rules: AxisRules, cache: dict, pos):
+    x = L.embed_tokens(params["embedding"], tokens, cfg, rules)
+    pe = sinusoidal_positions(cfg.max_seq_len, cfg.d_model).astype(cfg.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)
+
+    def body(x, xs):
+        blk, (sk, sv), (ek, ev) = xs
+        h = L.apply_norm(blk["ln1"], x, cfg)
+        a, (nk, nv) = apply_attn_block(
+            blk["self_attn"], h, cfg, rules, positions=None, window=0,
+            theta=cfg.rope_theta, cache_kv=(sk, sv), pos=pos,
+        )
+        x = x + a
+        x = _cross_attend(blk, x, (ek, ev), cfg, rules)
+        h2 = L.apply_norm(blk["ln2"], x, cfg)
+        return x + L.apply_mlp(blk["mlp"], h2, cfg, rules), (nk, nv)
+
+    x, nkv = maybe_scan(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross"]),
+        cfg.scan_layers,
+    )
+    cache = {"self": nkv, "cross": cache["cross"]}
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg, rules)
+    return logits[:, 0], cache

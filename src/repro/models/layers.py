@@ -1,0 +1,131 @@
+"""Norms, MLPs, embeddings — the boring substrate, done properly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import AxisRules, dense_init, shard, split_keys
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(d: int, cfg) -> dict:
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, cfg) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def norm_specs(cfg) -> dict:
+    s = {"scale": P(None)}
+    if cfg.norm == "layernorm":
+        s["bias"] = P(None)
+    return s
+
+
+def rms_norm_head(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-head QK-norm (gemma3): RMS over head_dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, d: int, d_ff: int, cfg) -> dict:
+    if cfg.act == "silu":  # SwiGLU
+        k1, k2, k3 = split_keys(key, 3)
+        return {
+            "wi": dense_init(k1, (d, d_ff), 0, cfg.param_dtype),
+            "wg": dense_init(k2, (d, d_ff), 0, cfg.param_dtype),
+            "wo": dense_init(k3, (d_ff, d), 0, cfg.param_dtype),
+        }
+    k1, k2 = split_keys(key, 2)
+    return {
+        "wi": dense_init(k1, (d, d_ff), 0, cfg.param_dtype),
+        "wo": dense_init(k2, (d_ff, d), 0, cfg.param_dtype),
+        "bi": jnp.zeros((d_ff,), cfg.param_dtype),
+        "bo": jnp.zeros((d,), cfg.param_dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg, rules: AxisRules) -> jax.Array:
+    dt = cfg.dtype
+    if cfg.act == "silu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)) + p["bi"].astype(dt)
+        h = jax.nn.gelu(h)
+    h = shard(h, rules, "batch", "seq", "tensor")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    if cfg.act != "silu":
+        out = out + p["bo"].astype(dt)
+    return out
+
+
+def mlp_specs(cfg) -> dict:
+    if cfg.act == "silu":
+        return {
+            "wi": P("fsdp", "tensor"),
+            "wg": P("fsdp", "tensor"),
+            "wo": P("tensor", "fsdp"),
+        }
+    return {
+        "wi": P("fsdp", "tensor"),
+        "wo": P("tensor", "fsdp"),
+        "bi": P("tensor"),
+        "bo": P(None),
+    }
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, cfg) -> dict:
+    k1, k2 = split_keys(key, 2)
+    p = {"embed": dense_init(k1, (cfg.vocab_size, cfg.d_model), 1, cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), 0, cfg.param_dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg, rules: AxisRules) -> jax.Array:
+    x = jnp.take(p["embed"].astype(cfg.dtype), tokens, axis=0)
+    return shard(x, rules, "batch", "seq", None)
+
+
+def unembed(p: dict, x: jax.Array, cfg, rules: AxisRules) -> jax.Array:
+    w = p.get("unembed")
+    if w is None:
+        w = p["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.dtype))
+    return shard(logits, rules, "batch", "seq", "tensor")
+
+
+def embedding_specs(cfg) -> dict:
+    s = {"embed": P("tensor", "fsdp")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = P("fsdp", "tensor")
+    return s
+
+
+def resolve_specs(tree, rules: AxisRules):
+    """Map logical-name PartitionSpecs → mesh-axis PartitionSpecs."""
+    def fix(s):
+        if not isinstance(s, P):
+            return s
+        return rules.spec(*s)
+
+    return jax.tree.map(fix, tree, is_leaf=lambda s: isinstance(s, P))

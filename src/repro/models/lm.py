@@ -1,0 +1,643 @@
+"""Decoder-only LMs: dense / MoE / MLA / SSM / hybrid / VLM assembly.
+
+One builder covers seven of the ten assigned architectures.  Layers are
+**stacked** and executed with ``lax.scan`` (+ per-layer ``jax.checkpoint``
+when ``cfg.remat``), so an 80-layer 110B config lowers to one-layer-sized
+HLO.  Per-layer attention *flavour* (window size, rope theta) rides along
+the scan as data — traced scalars in the mask/rope math — which keeps the
+stack homogeneous even for gemma3's 5:1 local:global pattern.
+
+API (all pure functions):
+  init(key, cfg)                       → params
+  forward(params, batch, cfg, rules)   → (logits, aux_loss)
+  init_cache(cfg, batch, max_len)      → cache pytree
+  prefill(params, batch, cfg, rules, cache) → (last_logits, cache)
+  decode_step(params, tokens, cfg, rules, cache, pos) → (logits, cache)
+  param_specs(cfg, rules, tp_size)     → PartitionSpec pytree (mesh-ready)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import attention
+from repro.models.common import (
+    AxisRules,
+    NO_SHARD,
+    dense_init,
+    maybe_scan,
+    prepend_none_spec,
+    shard,
+    split_keys,
+    stack_layers,
+)
+from repro.models.rope import apply_mrope, apply_rope
+
+
+# ============================================================== attention blk
+def init_attn(key, cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = split_keys(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, H, hd), 0, cfg.param_dtype),
+        "wk": dense_init(k2, (d, KV, hd), 0, cfg.param_dtype),
+        "wv": dense_init(k3, (d, KV, hd), 0, cfg.param_dtype),
+        "wo": dense_init(k4, (H, hd, d), (0, 1), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), cfg.param_dtype)
+        p["bk"] = jnp.zeros((KV, hd), cfg.param_dtype)
+        p["bv"] = jnp.zeros((KV, hd), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+def attn_specs(cfg) -> dict:
+    s = {
+        "wq": P("fsdp", "tensor", None),
+        "wk": P("fsdp", "tensor", None),
+        "wv": P("fsdp", "tensor", None),
+        "wo": P("tensor", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        s |= {"bq": P("tensor", None), "bk": P("tensor", None), "bv": P("tensor", None)}
+    if cfg.qk_norm:
+        s |= {"q_norm": P(None), "k_norm": P(None)}
+    return s
+
+
+def _qkv(p, x, cfg, rules, *, positions, theta, positions_thw=None):
+    dt = cfg.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = L.rms_norm_head(q, p["q_norm"].astype(jnp.float32))
+        k = L.rms_norm_head(k, p["k_norm"].astype(jnp.float32))
+    if cfg.mrope_sections and positions_thw is not None:
+        q = apply_mrope(q, positions_thw, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions_thw, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    q = shard(q, rules, "batch", "seq", "heads", None)
+    k = shard(k, rules, "batch", "seq", "heads", None)
+    v = shard(v, rules, "batch", "seq", "heads", None)
+    return q, k, v
+
+
+def apply_attn_block(
+    p, x, cfg, rules, *, positions, window, theta, positions_thw=None,
+    cache_kv=None, pos=None,
+):
+    """Attention sublayer.  Train/prefill when cache_kv is None; returns
+    (out, new_kv or (k,v) full-seq for cache building)."""
+    q, k, v = _qkv(p, x, cfg, rules, positions=positions, theta=theta,
+                   positions_thw=positions_thw)
+    if cache_kv is None:
+        out = attention(q, k, v, causal=True, window=window, chunk=cfg.attn_chunk,
+                        matmul_bf16=cfg.attn_matmul_bf16)
+        new_kv = (k, v)
+    elif len(cache_kv) == 3:
+        # ring-buffer window cache (§Perf lever): O(window) instead of O(seq)
+        ck, cv, kpos = cache_kv
+        ring = ck.shape[1]
+        slot = jax.lax.rem(pos, ring)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            kpos, pos[None].astype(kpos.dtype) if hasattr(pos, "shape") else
+            jnp.asarray([pos], kpos.dtype), slot, 0
+        )
+        out = attention(
+            q, ck, cv, causal=False, window=window, q_offset=pos,
+            chunk=cfg.attn_chunk, matmul_bf16=cfg.attn_matmul_bf16,
+            k_positions=kpos,
+        )
+        new_kv = (ck, cv, kpos)
+    else:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, 1)
+        out = attention(
+            q, ck, cv, causal=False, window=window, q_offset=pos,
+            kv_len=pos + 1, chunk=cfg.attn_chunk,
+            matmul_bf16=cfg.attn_matmul_bf16,
+        )
+        new_kv = (ck, cv)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(cfg.dtype))
+    return shard(out, rules, "batch", "seq", None), new_kv
+
+
+# ================================================================ block init
+def init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = split_keys(key, 2)
+    if cfg.family == "ssm" or (cfg.is_hybrid):
+        return {"ln": L.init_norm(cfg.d_model, cfg), "mamba": SSM.init_mamba(k1, cfg)}
+    blk = {"ln1": L.init_norm(cfg.d_model, cfg), "ln2": L.init_norm(cfg.d_model, cfg)}
+    if cfg.mla.kv_lora_rank:
+        blk["attn"] = MLA.init_mla(k1, cfg)
+    else:
+        blk["attn"] = init_attn(k1, cfg)
+    if cfg.is_moe:
+        blk["moe"] = MOE.init_moe(k2, cfg)
+    else:
+        blk["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg)
+    return blk
+
+
+def block_specs(cfg, tp_size: int) -> dict:
+    if cfg.family == "ssm" or cfg.is_hybrid:
+        return {"ln": L.norm_specs(cfg), "mamba": SSM.mamba_specs(cfg)}
+    s = {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg)}
+    s["attn"] = MLA.mla_specs(cfg) if cfg.mla.kv_lora_rank else attn_specs(cfg)
+    s["moe" if cfg.is_moe else "mlp"] = (
+        MOE.moe_specs(cfg, tp_size) if cfg.is_moe else L.mlp_specs(cfg)
+    )
+    return s
+
+
+def apply_block(
+    blk, x, cfg, rules, *, positions, window, theta, aux, positions_thw=None,
+    cache=None, pos=None,
+):
+    """One decoder layer.  Returns (x, aux, new_cache)."""
+    if cfg.family == "ssm" or cfg.is_hybrid:
+        h = L.apply_norm(blk["ln"], x, cfg)
+        y, new_cache = SSM.apply_mamba(blk["mamba"], h, cfg, rules, cache=cache, pos=pos)
+        return x + y, aux, new_cache
+    h = L.apply_norm(blk["ln1"], x, cfg)
+    if cfg.mla.kv_lora_rank:
+        if cache is None:
+            a, latent = MLA.mla_attention(
+                blk["attn"], h, cfg, rules, positions=positions, chunk=cfg.attn_chunk
+            )
+            new_cache = latent
+        else:
+            a, new_cache = MLA.mla_decode(blk["attn"], h, cfg, rules, cache=cache, pos=pos)
+    else:
+        a, new_cache = apply_attn_block(
+            blk["attn"], h, cfg, rules, positions=positions, window=window,
+            theta=theta, positions_thw=positions_thw, cache_kv=cache, pos=pos,
+        )
+    x = x + a
+    h2 = L.apply_norm(blk["ln2"], x, cfg)
+    if cfg.is_moe:
+        y, aux_l = MOE.apply_moe(blk["moe"], h2, cfg, rules)
+        aux = aux + aux_l
+    else:
+        y = L.apply_mlp(blk["mlp"], h2, cfg, rules)
+    return x + y, aux, new_cache
+
+
+# ============================================================ shared (zamba2)
+def init_shared_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "in_proj": dense_init(k1, (2 * cfg.d_model, cfg.d_model), 0, cfg.param_dtype),
+        "ln1": L.init_norm(cfg.d_model, cfg),
+        "attn": init_attn(k2, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg),
+    }
+
+
+def shared_block_specs(cfg) -> dict:
+    return {
+        "in_proj": P("fsdp", "tensor"),
+        "ln1": L.norm_specs(cfg),
+        "attn": attn_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def apply_shared_block(
+    p, x, x0, cfg, rules, *, positions, cache=None, pos=None
+):
+    """Zamba2 shared attention block: concat(h, embeddings) → proj → attn+MLP."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    t = jnp.einsum("bse,ed->bsd", cat, p["in_proj"].astype(cfg.dtype))
+    h = L.apply_norm(p["ln1"], t, cfg)
+    a, new_cache = apply_attn_block(
+        p["attn"], h, cfg, rules, positions=positions, window=0,
+        theta=cfg.rope_theta, cache_kv=cache, pos=pos,
+    )
+    t = t + a
+    h2 = L.apply_norm(p["ln2"], t, cfg)
+    t = t + L.apply_mlp(p["mlp"], h2, cfg, rules)
+    return x + t, new_cache
+
+
+# ==================================================================== init
+def init(key, cfg: ModelConfig) -> dict:
+    keys = split_keys(key, cfg.num_layers + 3)
+    params = {
+        "embedding": L.init_embedding(keys[0], cfg),
+        "final_norm": L.init_norm(cfg.d_model, cfg),
+        "blocks": stack_layers([init_block(keys[2 + i], cfg) for i in range(cfg.num_layers)]),
+    }
+    if cfg.is_hybrid:
+        params["shared"] = init_shared_block(keys[1], cfg)
+    return params
+
+
+def param_specs(cfg: ModelConfig, rules: AxisRules, tp_size: int = 1):
+    specs = {
+        "embedding": L.embedding_specs(cfg),
+        "final_norm": L.norm_specs(cfg),
+        "blocks": prepend_none_spec(block_specs(cfg, tp_size)),
+    }
+    if cfg.is_hybrid:
+        specs["shared"] = shared_block_specs(cfg)
+    return L.resolve_specs(specs, rules)
+
+
+def _layer_meta(cfg):
+    """Per-layer (window, theta) arrays carried through the scan as data."""
+    windows = jnp.array(
+        [cfg.layer_window(l) for l in range(cfg.num_layers)], jnp.int32
+    )
+    tg = cfg.rope_theta_global or cfg.rope_theta
+    thetas = jnp.array(
+        [
+            (tg if cfg.layer_window(l) == 0 else cfg.rope_theta)
+            for l in range(cfg.num_layers)
+        ],
+        jnp.float32,
+    )
+    return windows, thetas
+
+
+def _embed_in(params, batch, cfg, rules):
+    tokens = batch["tokens"]
+    x = L.embed_tokens(params["embedding"], tokens, cfg, rules)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    ve = batch.get("vision_embeds")
+    if ve is not None and cfg.vision_tokens:
+        x = jax.lax.dynamic_update_slice_in_dim(x, ve.astype(x.dtype), 0, 1)
+    return x
+
+
+# ==================================================================== forward
+def forward(params, batch, cfg: ModelConfig, rules: AxisRules = NO_SHARD):
+    """Training forward: returns (logits (B,S,V), aux_loss)."""
+    x = _embed_in(params, batch, cfg, rules)
+    B, S = batch["tokens"].shape
+    positions = jnp.arange(S)
+    positions_thw = batch.get("positions_thw")
+    windows, thetas = _layer_meta(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        blk, w, th = xs
+        x, aux, _ = apply_block(
+            blk, x, cfg, rules, positions=positions, window=w, theta=th, aux=aux,
+            positions_thw=positions_thw,
+        )
+        return (x, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.is_hybrid:
+        x0 = x
+        period = cfg.hybrid_period
+        n_periods = cfg.num_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_periods, period) + a.shape[1:]), params["blocks"]
+        )
+
+        def period_body(carry, xs):
+            x, aux = carry
+            pblk, w, th = xs
+
+            def inner(c, b):
+                return body_fn(c, (b, w[0], th[0]))
+
+            (x, aux), _ = maybe_scan(inner, (x, aux), pblk, cfg.scan_layers)
+            x, _ = apply_shared_block(
+                params["shared"], x, x0, cfg, rules, positions=positions
+            )
+            return (x, aux), None
+
+        w2 = windows.reshape(n_periods, period)
+        t2 = thetas.reshape(n_periods, period)
+        (x, aux), _ = maybe_scan(
+            period_body, (x, aux0), (blocks, w2, t2), cfg.scan_layers
+        )
+    else:
+        (x, aux), _ = maybe_scan(
+            body_fn, (x, aux0), (params["blocks"], windows, thetas),
+            cfg.scan_layers,
+        )
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg, rules)
+    return logits, aux
+
+
+# ================================================================ serve paths
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Per-layer cache stacked on a leading L axis (scan-compatible)."""
+    dtype = dtype or cfg.dtype
+    Lc = cfg.num_layers
+    if cfg.family == "ssm":
+        one = SSM.init_mamba_cache(cfg, batch, dtype)
+        return {"layers": jax.tree.map(lambda a: jnp.broadcast_to(a, (Lc,) + a.shape).copy(), one)}
+    if cfg.is_hybrid:
+        one = SSM.init_mamba_cache(cfg, batch, dtype)
+        n_periods = Lc // cfg.hybrid_period
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "layers": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (Lc,) + a.shape).copy(), one
+            ),
+            "shared": (
+                jnp.zeros((n_periods, batch, max_len, KV, hd), dtype),
+                jnp.zeros((n_periods, batch, max_len, KV, hd), dtype),
+            ),
+        }
+    if cfg.mla.kv_lora_rank:
+        one = MLA.init_mla_cache(cfg, batch, max_len, dtype)
+        return {"layers": jax.tree.map(lambda a: jnp.broadcast_to(a, (Lc,) + a.shape).copy(), one)}
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.decode_window_cache:
+        ws = [cfg.layer_window(l) for l in range(Lc)]
+        if not all(w > 0 for w in ws):
+            raise ValueError("decode_window_cache needs every layer windowed")
+        from repro.models.attention import RING_INVALID
+
+        ring = max(ws)
+        ring += (-ring) % 16  # mesh-divisible
+        return {
+            "layers": (
+                jnp.zeros((Lc, batch, ring, KV, hd), dtype),
+                jnp.zeros((Lc, batch, ring, KV, hd), dtype),
+                jnp.full((Lc, ring), RING_INVALID, jnp.int32),
+            )
+        }
+    return {
+        "layers": (
+            jnp.zeros((Lc, batch, max_len, KV, hd), dtype),
+            jnp.zeros((Lc, batch, max_len, KV, hd), dtype),
+        )
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules: AxisRules, cache: dict):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B,V), cache).  Prompt length = tokens.shape[1];
+    caches were sized to max_len ≥ prompt + new tokens.
+    """
+    x = _embed_in(params, batch, cfg, rules)
+    B, S = batch["tokens"].shape
+    positions = jnp.arange(S)
+    positions_thw = batch.get("positions_thw")
+    windows, thetas = _layer_meta(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            x, aux = carry
+            blk, w, th, c = xs
+            x, aux, nc = apply_block(
+                blk, x, cfg, rules, positions=positions, window=w, theta=th,
+                aux=aux, cache=c,
+            )
+            return (x, aux), nc
+
+        (x, _), new_layers = maybe_scan(
+            body, (x, aux0), (params["blocks"], windows, thetas, cache["layers"]),
+            cfg.scan_layers,
+        )
+        cache = {"layers": new_layers}
+    elif cfg.is_hybrid:
+        x0 = x
+        period = cfg.hybrid_period
+        n_periods = cfg.num_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_periods, period) + a.shape[1:]), params["blocks"]
+        )
+        lcache = jax.tree.map(
+            lambda a: a.reshape((n_periods, period) + a.shape[1:]), cache["layers"]
+        )
+
+        def period_body(carry, xs):
+            x, aux = carry
+            pblk, w, th, pc, sc = xs
+
+            def inner(c, b_and_cache):
+                b, cc = b_and_cache
+                x, aux, nc = apply_block(
+                    b, c[0], cfg, rules, positions=positions, window=w[0],
+                    theta=th[0], aux=c[1], cache=cc,
+                )
+                return (x, aux), nc
+
+            (x, aux), ncs = maybe_scan(inner, (x, aux), (pblk, pc), cfg.scan_layers)
+            # shared attention block fills its per-period KV cache
+            ck, cv = sc
+            x, (nk, nv) = apply_shared_block(
+                params["shared"], x, x0, cfg, rules, positions=positions,
+                cache=None, pos=None,
+            )
+            # write full-seq K/V into padded cache
+            nk_, nv_ = nk, nv
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, nk_.astype(ck.dtype), 0, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, nv_.astype(cv.dtype), 0, 1)
+            return (x, aux), (ncs, (ck, cv))
+
+        w2, t2 = windows.reshape(n_periods, period), thetas.reshape(n_periods, period)
+        (x, _), (nlayers, nshared) = maybe_scan(
+            period_body, (x, aux0), (blocks, w2, t2, lcache, cache["shared"]),
+            cfg.scan_layers,
+        )
+        cache = {
+            "layers": jax.tree.map(
+                lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), nlayers
+            ),
+            "shared": nshared,
+        }
+    elif cfg.decode_window_cache:
+        # ring cache: keep only the last `ring` prompt positions per layer
+        def body(carry, xs):
+            x, aux = carry
+            blk, w, th, (ck, cv, kpos) = xs
+            x, aux, kv = apply_block(
+                blk, x, cfg, rules, positions=positions, window=w, theta=th,
+                aux=aux, positions_thw=positions_thw,
+            )
+            k_full, v_full = kv
+            ring = ck.shape[1]
+            S_ = k_full.shape[1]
+            if S_ >= ring:
+                keep_pos = jnp.arange(S_ - ring, S_)
+                slots = keep_pos % ring
+                ck = ck.at[:, slots].set(k_full[:, -ring:].astype(ck.dtype))
+                cv = cv.at[:, slots].set(v_full[:, -ring:].astype(cv.dtype))
+                kpos = kpos.at[slots].set(keep_pos.astype(kpos.dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k_full.astype(ck.dtype), (0, 0, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v_full.astype(cv.dtype), (0, 0, 0, 0)
+                )
+                kpos = jax.lax.dynamic_update_slice(
+                    kpos, jnp.arange(S_, dtype=kpos.dtype), (0,)
+                )
+            return (x, aux), (ck, cv, kpos)
+
+        (x, _), new_layers = maybe_scan(
+            body, (x, aux0),
+            (params["blocks"], windows, thetas, cache["layers"]),
+            cfg.scan_layers,
+        )
+        cache = {"layers": new_layers}
+    elif cfg.prefill_inscan_cache:
+        # §Perf lever: write each layer's K/V (or MLA latent) into its padded
+        # cache slice INSIDE the scan body — avoids materialising the whole
+        # stacked (L,B,S,…) K/V tree a second time before one bulk copy.
+        def body(carry, xs):
+            x, aux = carry
+            blk, w, th, centry = xs
+            x, aux, kv = apply_block(
+                blk, x, cfg, rules, positions=positions, window=w, theta=th,
+                aux=aux, positions_thw=positions_thw,
+            )
+            if cfg.mla.kv_lora_rank:
+                c_new = jax.lax.dynamic_update_slice(
+                    centry["c"], kv[0].astype(centry["c"].dtype), (0, 0, 0)
+                )
+                kr_new = jax.lax.dynamic_update_slice(
+                    centry["kr"], kv[1].astype(centry["kr"].dtype), (0, 0, 0)
+                )
+                return (x, aux), {"c": c_new, "kr": kr_new}
+            ck, cv = centry
+            ck = jax.lax.dynamic_update_slice(ck, kv[0].astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, kv[1].astype(cv.dtype), (0, 0, 0, 0))
+            return (x, aux), (ck, cv)
+
+        (x, _), new_layers = maybe_scan(
+            body, (x, aux0),
+            (params["blocks"], windows, thetas, cache["layers"]),
+            cfg.scan_layers,
+        )
+        cache = {"layers": new_layers}
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            blk, w, th = xs
+            x, aux, kv = apply_block(
+                blk, x, cfg, rules, positions=positions, window=w, theta=th,
+                aux=aux, positions_thw=positions_thw,
+            )
+            return (x, aux), kv
+
+        (x, _), kvs = maybe_scan(
+            body, (x, aux0), (params["blocks"], windows, thetas), cfg.scan_layers
+        )
+        if cfg.mla.kv_lora_rank:
+            c0, kr0 = cache["layers"]["c"], cache["layers"]["kr"]
+            c0 = jax.lax.dynamic_update_slice(c0, kvs[0].astype(c0.dtype), (0, 0, 0, 0))
+            kr0 = jax.lax.dynamic_update_slice(kr0, kvs[1].astype(kr0.dtype), (0, 0, 0, 0))
+            cache = {"layers": {"c": c0, "kr": kr0}}
+        else:
+            ck, cv = cache["layers"]
+            ck = jax.lax.dynamic_update_slice(ck, kvs[0].astype(ck.dtype), (0, 0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, kvs[1].astype(cv.dtype), (0, 0, 0, 0, 0))
+            cache = {"layers": (ck, cv)}
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x[:, -1:], cfg, rules)
+    return logits[:, 0], cache
+
+
+def decode_step(params, tokens, cfg: ModelConfig, rules: AxisRules, cache: dict, pos):
+    """One token for every sequence.  tokens: (B, 1).  pos: traced scalar."""
+    batch = {"tokens": tokens}
+    x = _embed_in(params, batch, cfg, rules)
+    positions = None  # per-block paths use pos directly
+    windows, thetas = _layer_meta(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.is_hybrid:
+        x0 = x
+        period = cfg.hybrid_period
+        n_periods = cfg.num_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_periods, period) + a.shape[1:]), params["blocks"]
+        )
+        lcache = jax.tree.map(
+            lambda a: a.reshape((n_periods, period) + a.shape[1:]), cache["layers"]
+        )
+
+        def period_body(carry, xs):
+            x = carry
+            pblk, pc, sc = xs
+
+            def inner(c, b_and_cache):
+                b, cc = b_and_cache
+                x, _, nc = apply_block(
+                    b, c, cfg, rules, positions=None, window=0, theta=cfg.rope_theta,
+                    aux=aux0, cache=cc, pos=pos,
+                )
+                return x, nc
+
+            x, ncs = maybe_scan(inner, x, (pblk, pc), cfg.scan_layers)
+            x, nsc = apply_shared_block(
+                params["shared"], x, x0, cfg, rules,
+                positions=pos + jnp.zeros((1,), jnp.int32), cache=sc, pos=pos,
+            )
+            return x, (ncs, nsc)
+
+        x, (nlayers, nshared) = maybe_scan(
+            period_body, x, (blocks, lcache, cache["shared"]), cfg.scan_layers
+        )
+        cache = {
+            "layers": jax.tree.map(
+                lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), nlayers
+            ),
+            "shared": nshared,
+        }
+    else:
+        positions = pos + jnp.zeros((1,), jnp.int32)
+        positions_thw = None
+        if cfg.mrope_sections:
+            positions_thw = jnp.broadcast_to(
+                pos, (3, tokens.shape[0], 1)
+            ).astype(jnp.int32)
+
+        def body(x, xs):
+            blk, w, th, c = xs
+            x, _, nc = apply_block(
+                blk, x, cfg, rules, positions=positions, window=w, theta=th,
+                aux=aux0, positions_thw=positions_thw, cache=c, pos=pos,
+            )
+            return x, nc
+
+        x, new_layers = maybe_scan(
+            body, x, (params["blocks"], windows, thetas, cache["layers"]),
+            cfg.scan_layers,
+        )
+        cache = {"layers": new_layers}
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg, rules)
+    return logits[:, 0], cache

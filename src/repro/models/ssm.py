@@ -1,0 +1,225 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked scan + O(1) decode.
+
+Implements the minimal SSD algorithm of Dao & Gu (2024): within a chunk
+the recurrence is materialised as a (masked, decayed) attention-like
+quadratic; across chunks only the (heads, head_dim, d_state) states flow
+through an associative recurrence.  Decode is a single-step state update —
+no KV cache, constant memory per sequence, which is why ``long_500k`` is
+*trivial* for this family (DESIGN.md §5).
+
+Block layout follows mamba2: in_proj → [z | xBC | dt], causal conv1d over
+xBC, SSD over (x, B, C) with per-head A/D, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import AxisRules, dense_init, shard, split_keys
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = cfg.d_inner
+    nh = cfg.ssm_heads
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, nh, conv_dim
+
+
+def init_mamba(key, cfg) -> dict:
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nh
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "in_proj": dense_init(k1, (cfg.d_model, d_in_proj), 0, cfg.param_dtype),
+        "conv_w": dense_init(k2, (s.d_conv, conv_dim), 0, cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.zeros((nh,), cfg.param_dtype),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.param_dtype),
+        "norm_scale": jnp.ones((d_inner,), cfg.param_dtype),
+        "out_proj": dense_init(k3, (d_inner, cfg.d_model), 0, cfg.param_dtype),
+    }
+
+
+def mamba_specs(cfg) -> dict:
+    return {
+        "in_proj": P("fsdp", "tensor"),
+        "conv_w": P(None, "tensor"),
+        "conv_b": P("tensor"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm_scale": P("tensor"),
+        "out_proj": P("tensor", "fsdp"),
+    }
+
+
+def _split_proj(proj, cfg):
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, cfg, *, state=None):
+    """Depthwise causal conv1d.  xBC: (B,S,C); w: (W,C).  Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + xBC.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1) :] if W > 1 else pad[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = Σ_{k=j+1..i} x[..., k] (i ≥ j)."""
+    T = x.shape[-1]
+    xc = jnp.cumsum(x, -1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C, cfg, *, init_state=None):
+    """SSD over full sequences.  Shapes:
+    x (B,S,nh,hd) · dt (B,S,nh) · A (nh,) · B_/C (B,S,ng,ds).
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds))."""
+    s = cfg.ssm
+    Bt, S, nh, hd = x.shape
+    ng, ds = B_.shape[2], B_.shape[3]
+    Q = min(s.chunk_size, S)
+    if S % Q:
+        # zero-pad the tail: dt=0 ⇒ decay exp(0)=1 and contribution 0, so the
+        # final state is exact; padded outputs are sliced off below.
+        pad = Q - S % Q
+        zpad = lambda a: jnp.concatenate(
+            [a, jnp.zeros((Bt, pad) + a.shape[2:], a.dtype)], axis=1
+        )
+        x, dt, B_, C = zpad(x), zpad(dt), zpad(B_), zpad(C)
+        y, final = ssd_chunked(x, dt, A, B_, C, cfg, init_state=init_state)
+        return y[:, :S], final
+    nc = S // Q
+    rep = nh // ng
+
+    xf = x.astype(jnp.float32)
+    dA = dt * A  # (B,S,nh), negative
+    # chunk views
+    xc = xf.reshape(Bt, nc, Q, nh, hd)
+    dtc = dt.reshape(Bt, nc, Q, nh)
+    dAc = dA.reshape(Bt, nc, Q, nh).transpose(0, 3, 1, 2)  # (B,nh,nc,Q)
+    Bc = B_.astype(jnp.float32).reshape(Bt, nc, Q, ng, ds)
+    Cc = C.astype(jnp.float32).reshape(Bt, nc, Q, ng, ds)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,nh,ds)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA_cum = jnp.cumsum(dAc, -1)  # (B,nh,nc,Q)
+    # ---- intra-chunk (quadratic, attention-like)
+    L = jnp.exp(_segsum(dAc))  # (B,nh,nc,Q,Q)
+    xdt = xc * dtc[..., None]  # weight inputs by dt
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xdt)
+    # ---- chunk states
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (B,nh,nc,Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xdt)
+    # ---- inter-chunk recurrence over nc (scan)
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # (B,nh,nc)
+
+    def scan_body(carry, inp):
+        st, dec = inp  # st: (B,nh,hd,ds) contribution, dec: (B,nh)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((Bt, nh, hd, ds), jnp.float32)
+    final, entry_states = jax.lax.scan(
+        scan_body,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # (B,nc,nh,hd,ds)
+    # ---- contribution of entering state to each position
+    state_decay = jnp.exp(dA_cum)  # (B,nh,nc,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, entry_states, state_decay)
+    y = (y_diag + y_off).reshape(Bt, S, nh, hd)
+    return y, final
+
+
+def apply_mamba(p, x, cfg, rules: AxisRules, *, cache=None, pos=None):
+    """Mamba2 block.  Train/prefill when cache is None; else one decode step.
+
+    cache = {'conv': (B, W-1, conv_dim), 'ssm': (B, nh, hd, ds)}.
+    Returns (y, new_cache_or_None).
+    """
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    hd = s.head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cfg.dtype))
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if cache is None or x.shape[1] > 1:
+        # train (cache None) or prefill (cache present → fill it)
+        conv_state = None if cache is None else cache["conv"]
+        xBC, conv_tail = _causal_conv(
+            xBC, p["conv_w"].astype(cfg.dtype), p["conv_b"].astype(cfg.dtype), cfg,
+            state=conv_state,
+        )
+        xs, B_, C = jnp.split(xBC, [d_inner, d_inner + s.n_groups * s.d_state], -1)
+        Bt, S = x.shape[0], x.shape[1]
+        xs = xs.reshape(Bt, S, nh, hd)
+        B_ = B_.reshape(Bt, S, s.n_groups, s.d_state)
+        C = C.reshape(Bt, S, s.n_groups, s.d_state)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        init_state = None if cache is None else cache["ssm"]
+        y, final = ssd_chunked(xs, dt, A, B_, C, cfg, init_state=init_state)
+        y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+        new_cache = None if cache is None else {"conv": conv_tail, "ssm": final}
+    else:
+        # single step: update conv state + SSM state
+        w = p["conv_w"].astype(cfg.dtype)
+        xp = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, W, conv)
+        conv_out = jnp.einsum("bwc,wc->bc", xp, w) + p["conv_b"].astype(cfg.dtype)
+        xBC_t = jax.nn.silu(conv_out)[:, None]  # (B,1,conv)
+        xs, B_, C = jnp.split(xBC_t, [d_inner, d_inner + s.n_groups * s.d_state], -1)
+        Bt = x.shape[0]
+        xs = xs.reshape(Bt, nh, hd).astype(jnp.float32)
+        B_ = B_.reshape(Bt, s.n_groups, s.d_state).astype(jnp.float32)
+        C = C.reshape(Bt, s.n_groups, s.d_state).astype(jnp.float32)
+        rep = nh // s.n_groups
+        Bh = jnp.repeat(B_, rep, axis=1)  # (B,nh,ds)
+        Chh = jnp.repeat(C, rep, axis=1)
+        dt = jax.nn.softplus(
+            dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )  # (B,nh)
+        dA = jnp.exp(dt * A)  # (B,nh)
+        st = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt, xs, Bh
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", st, Chh) + xs * p["D"].astype(jnp.float32)[None, :, None]
+        y = y[:, None]  # (B,1,nh,hd)
+        new_cache = {"conv": xp[:, 1:], "ssm": st}
+        y = y.reshape(Bt, 1, nh, hd)
+    Bt, S = x.shape[0], x.shape[1]
+    y = y.reshape(Bt, S, d_inner).astype(cfg.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt(jnp.mean(jnp.square(gf), -1, keepdims=True) + 1e-6)).astype(
+        cfg.dtype
+    ) * p["norm_scale"].astype(cfg.dtype)
+    out = jnp.einsum("bse,ed->bsd", g, p["out_proj"].astype(cfg.dtype))
+    return shard(out, rules, "batch", "seq", None), new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

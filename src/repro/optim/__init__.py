@@ -1,0 +1,13 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedules import cosine_warmup
+from repro.optim.compression import quantize_int8, dequantize_int8, compress_grads
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "AdamWConfig",
+    "cosine_warmup",
+    "quantize_int8",
+    "dequantize_int8",
+    "compress_grads",
+]

@@ -1,0 +1,4 @@
+from repro.roofline.hw import V5E
+from repro.roofline.analysis import roofline_from_compiled, collective_bytes
+
+__all__ = ["V5E", "roofline_from_compiled", "collective_bytes"]

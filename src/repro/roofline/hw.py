@@ -1,0 +1,23 @@
+"""Target-hardware constants (TPU v5e, per assignment)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_bf16_flops: float  # per chip
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link (intra-pod)
+    inter_pod_bw: float  # bytes/s per link (optical tier)
+    hbm_bytes: float
+
+
+V5E = HW(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    inter_pod_bw=25e9,
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,74 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load_cells(d: str) -> list[dict]:
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def markdown_table(cells: list[dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "HBM GB/dev | fits 16G | useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["mesh"] != mesh or "roofline" not in c:
+            continue
+        r = c["roofline"]
+        hbm = c["memory_analysis"]["total_bytes"] / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['dominant']} | {hbm:.1f} | {'yes' if hbm <= 16 else 'NO'} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: list[dict]) -> list[dict]:
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (MoE with sort dispatch) among single-pod train/
+    serve cells."""
+    singles = [c for c in cells if c["mesh"] == "single" and "roofline" in c]
+    worst = min(singles, key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = max(
+        singles,
+        key=lambda c: c["roofline"]["t_collective_s"]
+        / max(c["roofline"]["bound_time_s"], 1e-12),
+    )
+    moes = [c for c in singles if c["arch"] in ("mixtral-8x22b", "deepseek-v2-lite-16b")
+            and c["shape"] == "train_4k"]
+    rep = moes[0] if moes else singles[0]
+    return [worst, coll, rep]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print(markdown_table(cells, args.mesh))
+    print()
+    picks = pick_hillclimb(cells)
+    print("hillclimb picks:",
+          [(c["arch"], c["shape"], c["roofline"]["dominant"]) for c in picks])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import elastic_mesh, reshard_state
+from repro.runtime.collectives import int8_psum, hierarchical_psum
+
+__all__ = ["elastic_mesh", "reshard_state", "int8_psum", "hierarchical_psum"]

@@ -1,0 +1,50 @@
+"""Elastic scaling: rebuild the mesh after pod loss, reshard the state.
+
+The contract: checkpoints store *logical* arrays (Checkpointer), so any
+surviving device population that can still hold the model restores and
+continues.  ``elastic_mesh`` picks the largest (pods', data, model) grid
+that fits the live devices; ``reshard_state`` device_puts a restored state
+tree onto it with the same PartitionSpec tree (specs are logical — they
+survive mesh size changes as long as axis names remain)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def elastic_mesh(
+    target_shape: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    devices=None,
+) -> Mesh:
+    """Largest mesh of `axis_names` that fits the available devices, shrinking
+    the FIRST axis (pods) first — losing a pod halves the pod axis, never the
+    intra-pod topology."""
+    devices = list(devices if devices is not None else jax.devices())
+    shape = list(target_shape)
+    while int(np.prod(shape)) > len(devices) and shape[0] > 1:
+        shape[0] -= 1
+    if int(np.prod(shape)) > len(devices):
+        raise ValueError(
+            f"cannot fit mesh {target_shape} (even at pod=1) on {len(devices)} devices"
+        )
+    use = devices[: int(np.prod(shape))]
+    arr = np.array(use).reshape(shape)
+    return Mesh(arr, axis_names)
+
+
+def reshard_state(state, spec_tree, mesh: Mesh):
+    """device_put every leaf with its PartitionSpec on the (new) mesh."""
+    import jax.numpy as jnp
+
+    def put(x, spec):
+        if spec is None:
+            return jax.device_put(x, NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, state, spec_tree,
+        is_leaf=lambda s: s is None or isinstance(s, jax.sharding.PartitionSpec),
+    )

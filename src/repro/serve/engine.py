@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill + decode with continuous-batch shaping.
+
+Batch formation uses the paper's technique: requests are **sorted by
+prompt length** with the framework's sort primitive
+(``repro.kernels.ops.local_sort_pairs`` — the bitonic pair-sort kernel),
+so each padded prefill batch wastes the minimum number of pad tokens —
+the serving-side face of the Array Division Procedure (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import AxisRules, NO_SHARD
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray  # (len,) int32 token ids
+    max_new_tokens: int = 16
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, model_api, *, rules: AxisRules = NO_SHARD,
+                 max_len: int = 512):
+        self.cfg, self.params, self.api = cfg, params, model_api
+        self.rules = rules
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b, c: model_api.prefill(p, b, cfg, rules, c)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model_api.decode_step(p, t, cfg, rules, c, pos)
+        )
+
+    # ------------------------------------------------------- batch formation
+    def order_by_length(self, requests: list[Request]) -> list[Request]:
+        """Sort requests by prompt length using the bitonic pair-sort kernel."""
+        lens = jnp.asarray([len(r.prompt) for r in requests], jnp.int32)
+        idx = jnp.arange(len(requests), dtype=jnp.int32)
+        _, order = ops.local_sort_pairs(lens, idx)
+        return [requests[int(i)] for i in np.asarray(order)]
+
+    def _pad_batch(self, requests: list[Request]):
+        B = len(requests)
+        L = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, L), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, L - len(r.prompt):] = r.prompt  # left-pad → aligned ends
+        return jnp.asarray(toks), L
+
+    # --------------------------------------------------------------- serving
+    def generate(self, requests: list[Request], greedy: bool = True) -> dict[int, list[int]]:
+        requests = self.order_by_length(requests)
+        toks, L = self._pad_batch(requests)
+        B = toks.shape[0]
+        batch = {"tokens": toks}
+        if self.cfg.family == "encdec":
+            batch["enc_frames"] = jnp.zeros(
+                (B, self.cfg.encoder_seq_len, self.cfg.d_model), self.cfg.dtype
+            )
+        cache = self.api.init_cache(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        out = {r.id: [] for r in requests}
+        steps = max(r.max_new_tokens for r in requests)
+        tok = jnp.argmax(logits, -1)[:, None]
+        for s in range(steps):
+            for i, r in enumerate(requests):
+                if s < r.max_new_tokens:
+                    out[r.id].append(int(tok[i, 0]))
+            logits, cache = self._decode(self.params, tok, cache, L + s)
+            tok = jnp.argmax(logits, -1)[:, None]
+        return out

@@ -1,0 +1,5 @@
+from repro.train.loss import lm_loss
+from repro.train.train_step import make_train_step, init_train_state
+from repro.train.trainer import Trainer
+
+__all__ = ["lm_loss", "make_train_step", "init_train_state", "Trainer"]

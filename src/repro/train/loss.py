@@ -1,0 +1,21 @@
+"""Next-token cross-entropy with z-loss + MoE aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 1e-4):
+    """logits (B,S,V) vs labels (B,S).  Returns (loss, metrics)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    z = z_loss * jnp.square(lse)
+    loss = jnp.mean(nll + z)
+    return loss, {
+        "ce": jnp.mean(nll),
+        "z_loss": jnp.mean(z),
+        "accuracy": jnp.mean(jnp.argmax(lf, -1) == labels),
+    }

@@ -1,0 +1,150 @@
+"""The jit'd training step: loss → grad → (optional compression) → AdamW.
+
+Buffer donation on (params, opt_state) keeps peak memory at
+params + grads + states (not 2×params); remat inside the model bounds
+activation memory; the LR schedule runs on the traced step so one compiled
+step serves the whole run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.common import AxisRules, NO_SHARD
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_grads, init_error_fb
+from repro.optim.schedules import cosine_warmup
+from repro.train.loss import lm_loss
+
+
+def init_train_state(key, cfg: ModelConfig, run: RunConfig, model_api):
+    params = model_api.init(key, cfg)
+    opt = adamw_init(params)
+    if run.master_weights:
+        # §Perf lever: f32 master lives in the optimizer; live params are
+        # bf16, halving FSDP all-gather and DP grad-reduce bytes.
+        opt["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    if run.grad_compression == "int8":
+        state["error_fb"] = init_error_fb(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, model_api,
+                    rules: AxisRules = NO_SHARD, grad_specs=None):
+    """``grad_specs``: optional PartitionSpec tree for gradients — a
+    with_sharding_constraint right after the VJP lets the partitioner use
+    reduce-scatter into the (FSDP-sharded) accumulation buffer instead of a
+    full all-reduce (§Perf lever 'gradrs')."""
+    opt_cfg = AdamWConfig(weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+
+    def loss_fn(params, batch):
+        logits, aux = model_api.forward(params, batch, cfg, rules)
+        loss, metrics = lm_loss(logits, batch["labels"])
+        return loss + aux, (metrics, aux)
+
+    # microbatch split axis per input key ((3,B,S) positions are axis 1)
+    _MB_AXIS = {"positions_thw": 1}
+
+    def _constrain(g):
+        if grad_specs is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s)
+            if s is not None else x,
+            g, grad_specs,
+            is_leaf=lambda s: s is None
+            or isinstance(s, jax.sharding.PartitionSpec),
+        )
+
+    def _grads(params, batch):
+        A = run.grad_accum
+        if A <= 1:
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return (l, aux), _constrain(g)
+
+        def split(k, x):
+            ax = _MB_AXIS.get(k, 0)
+            b = x.shape[ax]
+            new = x.shape[:ax] + (A, b // A) + x.shape[ax + 1 :]
+            return jnp.moveaxis(x.reshape(new), ax, 0)
+
+        mbs = {k: split(k, v) for k, v in batch.items()}
+
+        def body(acc, mb):
+            (loss, (metrics, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            g = _constrain(g)
+            g32 = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc[0], g)
+            return (g32, acc[1] + loss, acc[2] + aux,
+                    jax.tree.map(lambda a, b: a + b, acc[3], metrics)), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {"ce": 0.0, "z_loss": 0.0, "accuracy": 0.0}
+        zero_m = jax.tree.map(jnp.float32, zero_m)
+        from repro.models.common import maybe_scan
+
+        (g, loss, aux, metrics), _ = maybe_scan(
+            body, (zero_g, jnp.float32(0), jnp.float32(0), zero_m), mbs,
+            not run.grad_accum_unroll,
+        )
+        inv = 1.0 / A
+        return (loss * inv, (jax.tree.map(lambda m: m * inv, metrics), aux * inv)), \
+            jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(state, batch):
+        (loss, (metrics, aux)), grads = _grads(state["params"], batch)
+        if run.grad_compression == "int8":
+            grads, new_fb = compress_grads(grads, state["error_fb"])
+        lr = cosine_warmup(
+            state["step"], peak_lr=run.learning_rate, warmup=run.warmup_steps,
+            total=run.total_steps,
+        )
+        if run.master_weights:
+            inner = {k: state["opt"][k] for k in ("m", "v", "count")}
+            new_master, new_opt, opt_metrics = adamw_update(
+                state["opt"]["master"], grads, inner, lr, opt_cfg
+            )
+            new_opt["master"] = new_master
+            new_params = jax.tree.map(
+                lambda m, p: m.astype(p.dtype), new_master, state["params"]
+            )
+        else:
+            new_params, new_opt, opt_metrics = adamw_update(
+                state["params"], grads, state["opt"], lr, opt_cfg
+            )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if run.grad_compression == "int8":
+            new_state["error_fb"] = new_fb
+        out_metrics = {"loss": loss, "aux": aux, "lr": lr, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, mesh=None, state_specs=None, batch_specs=None):
+    """jit with donation (and shardings when a mesh is given)."""
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=(0,))
+    from jax.sharding import NamedSharding
+
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
+    )
+    return jax.jit(
+        train_step,
+        donate_argnums=(0,),
+        in_shardings=(to_sharding(state_specs), to_sharding(batch_specs)),
+        out_shardings=(to_sharding(state_specs), None),
+    )

@@ -1,0 +1,62 @@
+"""shard_map distributed sort on 8 fake devices (subprocess: the main test
+process must keep 1 device)."""
+
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import dist_sort, host_check_globally_sorted
+from repro.data.distributions import make_array
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+def exact(v, c, n8):
+    vals = np.asarray(v).reshape(8, -1); cc = np.asarray(c).ravel()
+    return np.concatenate([np.sort(vals[i])[:cc[i]] for i in range(8)])
+
+for dist in ["random", "sorted", "reversed", "local"]:
+    x = make_array(dist, 8192, seed=3)
+    for method in ["sample", "paper"]:
+        cf = 8.0  # sorted input sends a whole shard to one destination row
+        v, c = dist_sort(jnp.asarray(x), mesh=mesh, axis_names=("data",),
+                         method=method, capacity_factor=cf)
+        got = exact(v, c, 8192)
+        if method == "sample" or dist != "local":
+            assert np.array_equal(got, np.sort(x)), (dist, method)
+        else:
+            # paper splitters under clustered values overflow capacity —
+            # detectable as dropped elements, never silent corruption
+            assert host_check_globally_sorted(np.asarray(v), np.asarray(c))
+
+mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+x = make_array("random", 8192, seed=5)
+v, c = dist_sort(jnp.asarray(x), mesh=mesh2, axis_names=("pod", "data"),
+                 method="hier", capacity_factor=8.0)
+assert np.array_equal(exact(v, c, 8192), np.sort(x)), "hier"
+
+# Valiant two-hop routing: sorted input at capacity_factor=2 — the direct
+# route drops 3/4 of the data (send skew), valiant keeps all of it.
+xs = make_array("sorted", 8192, seed=3)
+v, c = dist_sort(jnp.asarray(xs), mesh=mesh, axis_names=("data",),
+                 method="sample", capacity_factor=2.0)
+assert int(np.asarray(c).sum()) < 8192, "expected direct-route overflow"
+v, c = dist_sort(jnp.asarray(xs), mesh=mesh, axis_names=("data",),
+                 method="valiant", capacity_factor=2.0)
+assert np.array_equal(exact(v, c, 8192), np.sort(xs)), "valiant"
+print("DIST_SORT_SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dist_sort_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert "DIST_SORT_SUBPROCESS_OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,91 @@
+"""Paper-faithful sort: correctness across the paper's distributions,
+counters behaviour (Figs 6.20–6.24), cost-model sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LinkModel,
+    OHHCTopology,
+    model_comm_time_s,
+    ohhc_sort_host,
+    ohhc_sort_sim,
+    parallel_quicksort_counters,
+    quicksort_counters,
+)
+from repro.core.schedule import AccumulationSchedule
+from repro.data.distributions import make_array
+
+DISTS = ["random", "sorted", "reversed", "local"]
+
+
+@pytest.mark.parametrize("dist", DISTS)
+@pytest.mark.parametrize("method", ["paper", "sampled"])
+def test_sim_sort_correct(dist, method):
+    topo = OHHCTopology(1, "full")
+    x = make_array(dist, 4096, seed=1)
+    cap = 4096 if (dist in ("local",) and method == "paper") else None
+    out, counts = ohhc_sort_sim(jnp.asarray(x), topo, method=method, capacity=cap)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x))
+    assert int(counts.sum()) == 4096
+
+
+@pytest.mark.parametrize("variant", ["full", "half"])
+def test_host_sort_correct(variant):
+    topo = OHHCTopology(2, variant)
+    x = make_array("random", 100_000, seed=2)
+    r = ohhc_sort_host(x, topo)
+    np.testing.assert_array_equal(r.sorted_array, np.sort(x))
+    assert r.bucket_sizes.sum() == x.size
+    assert r.paper_steps == 12 * topo.num_groups * 2 - 2
+    assert r.t_parallel_model_s > 0
+
+
+def test_paper_buckets_collapse_on_local_distribution():
+    """The paper's own weakness: clustered values swamp a few buckets."""
+    topo = OHHCTopology(1, "full")
+    x = make_array("local", 100_000, seed=3)
+    r_paper = ohhc_sort_host(x, topo, method="paper")
+    r_sample = ohhc_sort_host(x, topo, method="sampled")
+    imb_paper = r_paper.bucket_sizes.max() / np.mean(r_paper.bucket_sizes)
+    imb_sample = r_sample.bucket_sizes.max() / np.mean(r_sample.bucket_sizes)
+    assert imb_paper > 5.0  # equal-width ranges collapse
+    assert imb_sample < 2.0  # sampled splitters stay balanced
+
+
+def test_counters_match_paper_qualitative_findings():
+    """Fig 6.22: sorted input needs far fewer swaps than random;
+    Fig 6.20/6.23: iterations drop as dimension (processor count) grows."""
+    x_rand = make_array("random", 20_000, seed=4).astype(np.int64)
+    x_sort = np.sort(x_rand)
+    c_rand = quicksort_counters(x_rand)
+    c_sort = quicksort_counters(x_sort)
+    assert c_sort.swaps < 0.05 * c_rand.swaps
+    it = {}
+    for d_h in (1, 2):
+        it[d_h] = parallel_quicksort_counters(x_rand, OHHCTopology(d_h, "full")).iterations
+    assert it[2] < it[1]  # more processors → smaller buckets → fewer iterations
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(10, 3000))
+@settings(max_examples=20, deadline=None)
+def test_counter_sort_is_a_sort(seed, n):
+    """The instrumented quicksort's partition bookkeeping must itself sort."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 100, n)  # duplicates stress the partition logic
+    c = quicksort_counters(x.astype(np.int64))
+    assert c.recursion_calls >= 0 and c.iterations >= 0
+
+
+def test_comm_model_monotonicity():
+    """More data → more comm time; optical-only link slowdown increases it."""
+    topo = OHHCTopology(2, "full")
+    sched = AccumulationSchedule.build(topo)
+    even = [100] * topo.total_procs
+    t1 = model_comm_time_s(sched, even)
+    t2 = model_comm_time_s(sched, [200] * topo.total_procs)
+    t3 = model_comm_time_s(sched, even, LinkModel(optical_gbps=2.5))
+    assert t2 > t1
+    assert t3 > t1

@@ -1,0 +1,66 @@
+"""Array Division Procedure (§3.1) properties + sampled splitters."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+
+
+@given(
+    n=st.integers(2, 500),
+    buckets=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_paper_buckets_are_ordered(n, buckets, seed):
+    """Range partitioning's invariant: every value in bucket i ≤ every value
+    in bucket j for i < j — the merge-free property."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**30), 2**30, n).astype(np.int32)
+    ids = np.asarray(partition.paper_bucket_ids(jnp.asarray(x), buckets))
+    assert ids.min() >= 0 and ids.max() < buckets
+    order = np.argsort(ids, kind="stable")
+    maxes = {}
+    for i, b in zip(order, ids[order]):
+        maxes.setdefault(b, []).append(x[i])
+    keys = sorted(maxes)
+    for a, b in zip(keys, keys[1:]):
+        assert max(maxes[a]) <= min(maxes[b])
+
+
+@given(n=st.integers(32, 2000), buckets=st.integers(2, 16))
+@settings(max_examples=25, deadline=None)
+def test_sampled_splitters_balance(n, buckets):
+    rng = np.random.default_rng(buckets * 1000 + n)
+    x = rng.normal(0, 1e6, n).astype(np.int32)  # clustered (paper's 'local')
+    spl = partition.sampled_splitters(jnp.asarray(x), buckets, oversample=64)
+    ids = np.asarray(partition.splitter_bucket_ids(jnp.asarray(x), spl))
+    counts = np.bincount(ids, minlength=buckets)
+    assert counts.max() <= max(4.0 * n / buckets, 16)
+
+
+def test_scatter_unscatter_roundtrip(rng):
+    x = rng.integers(0, 1 << 20, 1000).astype(np.int32)
+    ids = partition.paper_bucket_ids(jnp.asarray(x), 8)
+    buckets, counts = partition.scatter_to_buckets(jnp.asarray(x), ids, 8, 1000)
+    assert int(counts.sum()) == 1000
+    buckets = jnp.sort(buckets, axis=1)
+    out = partition.unscatter(buckets, counts, 1000)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x))
+
+
+def test_overflow_is_detected(rng):
+    x = rng.integers(0, 10, 100).astype(np.int32)  # heavy duplicates
+    ids = partition.paper_bucket_ids(jnp.asarray(x), 4)
+    _, counts = partition.scatter_to_buckets(jnp.asarray(x), ids, 4, 8)
+    assert int(counts.sum()) < 100  # clipped counts expose the overflow
+
+
+def test_ranks_are_stable(rng):
+    ids = jnp.asarray(rng.integers(0, 4, 64).astype(np.int32))
+    ranks = np.asarray(partition.bucket_ranks(ids, 4))
+    for b in range(4):
+        rb = ranks[np.asarray(ids) == b]
+        np.testing.assert_array_equal(rb, np.arange(len(rb)))

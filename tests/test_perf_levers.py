@@ -1,0 +1,95 @@
+"""§Perf levers must be numerics-preserving (they only change layout/dtype
+of intermediates): ring window cache, sharded MoE dispatch buffer, bf16
+attention matmuls (loose tol), master weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import MoEConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.models.common import NO_SHARD
+
+
+def _serve_outputs(cfg, api, params, toks, S):
+    cache = api.init_cache(cfg, toks.shape[0], S + 4)
+    last, cache = api.prefill(params, {"tokens": toks[:, : S - 2]}, cfg, NO_SHARD, cache)
+    lg1, cache = api.decode_step(params, toks[:, S - 2 : S - 1], cfg, NO_SHARD, cache, S - 2)
+    lg2, cache = api.decode_step(params, toks[:, S - 1 : S], cfg, NO_SHARD, cache, S - 1)
+    return [np.asarray(last), np.asarray(lg1), np.asarray(lg2)]
+
+
+def test_ring_window_cache_exact():
+    cfg = registry.get_config("mixtral-8x22b", smoke=True).replace(
+        dtype=jnp.float32, remat=False
+    )
+    api = registry.get_model_api(cfg)
+    B, S = 2, 48  # prompt longer than the 32-token smoke window
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full = _serve_outputs(cfg, api, params, toks, S)
+    ring = _serve_outputs(cfg.replace(decode_window_cache=True), api, params, toks, S)
+    for a, b in zip(full, ring):
+        np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+def test_ring_cache_rejects_global_layers():
+    cfg = registry.get_config("gemma3-4b", smoke=True).replace(decode_window_cache=True)
+    api = registry.get_model_api(cfg)
+    with pytest.raises(ValueError):
+        api.init_cache(cfg, 2, 64)
+
+
+def test_moe_dispatch_sharded_same_numerics():
+    from repro.models import moe as MOE
+
+    cfg = ModelConfig(
+        family="moe", d_model=32, dtype=jnp.float32, param_dtype=jnp.float32,
+        moe=MoEConfig(num_experts=8, num_experts_per_tok=2, expert_d_ff=16,
+                      dispatch="sorted", capacity_factor=8.0),
+    )
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    y0, _ = MOE.apply_moe(p, x, cfg, NO_SHARD)
+    cfg2 = cfg.replace(moe=MoEConfig(num_experts=8, num_experts_per_tok=2,
+                                     expert_d_ff=16, dispatch="sorted",
+                                     capacity_factor=8.0, dispatch_sharded=True,
+                                     expert_parallel=True))
+    y1, _ = MOE.apply_moe(p, x, cfg2, NO_SHARD)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)
+
+
+def test_attn_matmul_bf16_close_to_f32():
+    cfg = registry.get_config("minitron-4b", smoke=True).replace(
+        dtype=jnp.float32, remat=False
+    )
+    api = registry.get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    l0, _ = api.forward(params, {"tokens": toks}, cfg, NO_SHARD)
+    l1, _ = api.forward(params, {"tokens": toks}, cfg.replace(attn_matmul_bf16=True), NO_SHARD)
+    # bf16 matmuls with f32 accumulation: relative error ~1e-2 on logits
+    rel = np.max(np.abs(np.asarray(l0) - np.asarray(l1))) / (np.max(np.abs(np.asarray(l0))) + 1e-9)
+    assert rel < 5e-2, rel
+
+
+def test_master_weights_training_converges():
+    from repro.data.pipeline import SyntheticLMData
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = registry.get_config("minitron-4b", smoke=True).replace(remat=False)
+    api = registry.get_model_api(cfg)
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 4, "train"),
+                    master_weights=True, warmup_steps=1, total_steps=10,
+                    learning_rate=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, run, api)
+    assert jax.tree.leaves(state["params"])[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(state["opt"]["master"])[0].dtype == jnp.float32
+    step = jax.jit(make_train_step(cfg, run, api, NO_SHARD))
+    data = SyntheticLMData(cfg, 4, 32)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, data.next_batch())
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,64 @@
+"""OHHC topology invariants vs the paper's Table 1.1 and link rules."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import HHC_SIZE, OHHCTopology, hhc_cell_edges, table_1_1
+
+EXPECTED_TABLE_1_1 = {
+    (1, "full"): (6, 36),
+    (2, "full"): (12, 144),
+    (3, "full"): (24, 576),
+    (4, "full"): (48, 2304),
+    (1, "half"): (3, 18),
+    (2, "half"): (6, 72),
+    (3, "half"): (12, 288),
+    (4, "half"): (24, 1152),
+}
+
+
+def test_table_1_1():
+    assert table_1_1() == EXPECTED_TABLE_1_1
+
+
+def test_hhc_cell_edges():
+    edges = hhc_cell_edges()
+    assert len(edges) == 9  # 2 triangles (3 each) + 3 cross
+    # the cross pairing the §3.2(a) algorithm uses
+    assert (0, 5) in edges and (1, 3) in edges and (2, 4) in edges
+
+
+@pytest.mark.parametrize("d_h", [1, 2, 3, 4])
+@pytest.mark.parametrize("variant", ["full", "half"])
+def test_degrees_and_optical(d_h, variant):
+    t = OHHCTopology(d_h, variant)
+    # every node has 3 intra-cell neighbours + hypercube links on heads
+    for local in range(t.procs_per_group):
+        nbrs = t.electrical_neighbors(local)
+        cell, node = t.split_local(local)
+        expected = 3 + (d_h - 1 if node == 0 else 0)
+        assert len(nbrs) == expected, (local, nbrs)
+        assert local not in nbrs
+    # optical transpose symmetry: (g,x)→(x,g)→(g,x)
+    for g in range(t.num_groups):
+        for x in range(t.procs_per_group):
+            p = t.optical_partner(g, x)
+            if p is not None:
+                g2, x2 = p
+                assert t.optical_partner(g2, x2) == (g, x)
+
+
+@given(d_h=st.integers(1, 5), variant=st.sampled_from(["full", "half"]))
+@settings(max_examples=20, deadline=None)
+def test_sizes_property(d_h, variant):
+    t = OHHCTopology(d_h, variant)
+    assert t.procs_per_group == HHC_SIZE * 2 ** (d_h - 1)
+    assert t.total_procs == t.num_groups * t.procs_per_group
+    if variant == "full":
+        assert t.num_groups == t.procs_per_group
+    else:
+        assert 2 * t.num_groups == t.procs_per_group
+    # addressing is a bijection
+    for gid in [0, t.total_procs - 1, t.total_procs // 2]:
+        g, l = t.addr(gid)
+        assert t.global_id(g, l) == gid
