@@ -1,0 +1,89 @@
+"""SortEngine dispatch benchmark (beyond paper): autotuned vs fixed methods.
+
+For every input class (the paper's four + duplicate-heavy) and size, times
+
+* ``auto``  — ``SortEngine.sort`` with full stats→dispatch→capacity autotune
+  (DESIGN.md §4), and
+* ``fixed/<method>`` — the pre-engine calling convention: the same executor
+  with a hand-picked method and the legacy ``2·ceil(n/P)`` capacity (the
+  engine's overflow-escalation keeps it *correct* on skewed inputs, so the
+  fixed baselines pay their recompile/retry cost honestly).
+
+The acceptance bar: ``auto`` within 10% of the best fixed method on every
+scenario (it should usually *be* the best fixed method, minus the guessing).
+Derived CSV fields carry ``ratio_vs_best_fixed`` per scenario.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, n_for_mb, sizes_mb
+from repro.core import OHHCTopology, SortEngine, SortPlan, default_capacity
+from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
+from repro.kernels import ops
+
+FIXED_METHODS = ("paper", "sampled")
+ROUNDS = 3
+
+
+def _fixed_plan(eng: SortEngine, n: int, method: str) -> SortPlan:
+    """What callers did before the engine: fixed method, heuristic capacity."""
+    if n >= eng.host_threshold:
+        return SortPlan("host", method, None, None, "fixed baseline")
+    padded = ops.bucketed_length(n)
+    cap = default_capacity(padded, eng.topo.total_procs)
+    return SortPlan("sim", method, cap, padded, "fixed baseline")
+
+
+def run(paper: bool = False) -> dict:
+    topo = OHHCTopology(1, "full")
+    eng = SortEngine(topo)
+    out = {}
+    for dist in ALL_DISTRIBUTIONS:
+        for mb in sizes_mb(paper):
+            n = n_for_mb(mb)
+            x = make_array(dist, n, seed=mb)
+            expect = np.sort(x)
+
+            configs = {"auto": None}
+            configs.update({m: _fixed_plan(eng, n, m) for m in FIXED_METHODS})
+            # warm every executable + check correctness once per config
+            retries = {}
+            for name, fp in configs.items():
+                got = eng.sort(x) if fp is None else eng.sort(x, plan=fp)
+                assert np.array_equal(got, expect), (name, dist, mb)
+                retries[name] = eng.last_report["overflow_retries"]
+                if fp is None:
+                    plan = eng.last_report["plan"]
+            # interleaved rounds, min per config: immune to allocator/cache
+            # warm-up drift that would bias whichever config is timed first
+            times = {name: float("inf") for name in configs}
+            for _ in range(ROUNDS):
+                for name, fp in configs.items():
+                    t0 = time.perf_counter()
+                    eng.sort(x) if fp is None else eng.sort(x, plan=fp)
+                    times[name] = min(times[name], time.perf_counter() - t0)
+
+            for m in FIXED_METHODS:
+                emit(
+                    f"engine/fixed-{m}/{dist}/{mb}MB",
+                    times[m] * 1e6,
+                    f"path={configs[m].path};retries={retries[m]}",
+                )
+            best = min(times[m] for m in FIXED_METHODS)
+            ratio = times["auto"] / best if best > 0 else 1.0
+            out[(dist, mb)] = {**times, "ratio": ratio}
+            emit(
+                f"engine/auto/{dist}/{mb}MB",
+                times["auto"] * 1e6,
+                f"path={plan.path};method={plan.method};"
+                f"ratio_vs_best_fixed={ratio:.2f}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ from benchmarks import (
     bench_commsteps,
     bench_counters,
     bench_efficiency,
+    bench_engine,
     bench_kernels,
     bench_moe_dispatch,
     bench_parallel,
@@ -33,6 +34,7 @@ SUITES = {
     "commsteps": lambda paper: bench_commsteps.run(paper),  # Theorem 3
     "kernels": lambda paper: bench_kernels.run(paper),
     "moe_dispatch": lambda paper: bench_moe_dispatch.run(paper),
+    "engine": lambda paper: bench_engine.run(paper),  # autotuned dispatch
 }
 
 

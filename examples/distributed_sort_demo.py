@@ -20,15 +20,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import dist_sort, host_check_globally_sorted
 from repro.data.distributions import make_array
 
 
 def main():
     n = 1 << 15
-    auto = (jax.sharding.AxisType.Auto,)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=auto)
-    mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=auto * 2)
+    mesh = compat.make_mesh((8,), ("data",))
+    mesh2 = compat.make_mesh((2, 4), ("pod", "data"))
 
     for dist in ("random", "local"):
         x = make_array(dist, n, seed=7)

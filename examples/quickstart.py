@@ -18,10 +18,11 @@ import numpy as np
 from repro.core import (
     AccumulationSchedule,
     OHHCTopology,
+    SortEngine,
     ohhc_sort_host,
     ohhc_sort_sim,
 )
-from repro.data.distributions import make_array
+from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
 from repro.kernels import ops
 
 
@@ -52,6 +53,26 @@ def main():
     print(f"1M-element host run: slowest bucket sort "
           f"{r.local_sort_times_s.max()*1e3:.2f} ms, modelled comm "
           f"{r.comm_model_time_s*1e3:.3f} ms, T_P={r.t_parallel_model_s*1e3:.2f} ms")
+
+    # the unified engine: stats → path/method dispatch + capacity autotune
+    # (DESIGN.md §4) — no hand-picked method or capacity anywhere.
+    eng = SortEngine(topo)
+    for dist in ALL_DISTRIBUTIONS:
+        x = make_array(dist, 50_000, seed=2)
+        out = eng.sort(x)
+        assert np.array_equal(out, np.sort(x))
+        rep = eng.last_report
+        print(f"engine[{dist:>8}]: path={rep['plan'].path} "
+              f"method={rep['plan'].method} "
+              f"capacity={rep.get('capacity_used', '-')} "
+              f"label={rep['stats'].label}")
+
+    # batched traffic: one vmapped executable sorts the whole request batch
+    outs = eng.sort_many([make_array("random", n, seed=n)
+                          for n in (900, 1500, 2000)])
+    assert all(np.all(np.diff(o) >= 0) for o in outs)
+    print(f"sort_many: {len(outs)} requests, {eng.trace_count} total traces "
+          f"this session (shape-bucketed warm cache)")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@ TPU: bitonic sort, bucket partition), models (10 assigned architectures),
 configs, data, optim, train, serve, ckpt, runtime (fault tolerance, PP,
 collectives), launch (mesh/dryrun/train/serve), roofline.
 
-See DESIGN.md and EXPERIMENTS.md.
+See DESIGN.md (architecture contract), README.md (map + quickstart), and
+benchmarks/README.md (paper figure/table coverage).
 """
 
 __version__ = "1.0.0"

@@ -3,12 +3,14 @@
 Modules: topology (OHHC graph), schedule (3-phase accumulation + Theorem-3
 accounting), partition (Array Division Procedure + balanced splitters),
 ohhc_sort (paper-faithful sort + counters + cost model), sample_sort
-(beyond-paper models), dist_sort (shard_map mesh implementation).
+(beyond-paper models), dist_sort (shard_map mesh implementation), engine
+(the unified autotuned dispatch layer over all three paths, DESIGN.md §4).
 """
 
 from repro.core.topology import OHHCTopology, table_1_1, HHC_SIZE
 from repro.core.schedule import AccumulationSchedule, payload_bytes_per_round
 from repro.core.partition import (
+    default_capacity,
     paper_bucket_ids,
     sampled_splitters,
     splitter_bucket_ids,
@@ -27,13 +29,28 @@ from repro.core.ohhc_sort import (
     model_comm_time_s,
 )
 from repro.core.dist_sort import dist_sort, host_check_globally_sorted
+from repro.core.engine import (
+    InputStats,
+    SortEngine,
+    SortPlan,
+    autotune_capacity,
+    choose_plan,
+    estimate_stats,
+)
 
 __all__ = [
+    "InputStats",
+    "SortEngine",
+    "SortPlan",
+    "autotune_capacity",
+    "choose_plan",
+    "estimate_stats",
     "OHHCTopology",
     "table_1_1",
     "HHC_SIZE",
     "AccumulationSchedule",
     "payload_bytes_per_round",
+    "default_capacity",
     "paper_bucket_ids",
     "sampled_splitters",
     "splitter_bucket_ids",

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import partition
 
 
@@ -152,8 +153,8 @@ def dist_sort(
     else:
         raise ValueError(f"unknown method {method!r}")
 
-    fn = jax.shard_map(
-        impl, mesh=mesh, in_specs=(spec,), out_specs=(spec, spec), check_vma=False
+    fn = compat.shard_map(
+        impl, mesh=mesh, in_specs=(spec,), out_specs=(spec, spec)
     )
     return fn(x)
 

@@ -1,0 +1,589 @@
+"""Unified autotuned sort engine — the single entry point over the three
+execution paths (DESIGN.md §4).
+
+The repo has three faithful implementations of the paper's parallel Quick
+Sort — ``ohhc_sort_sim`` (jit/vmap simulated processors), ``ohhc_sort_host``
+(paper-scale numpy with the Theorem-6 comm model) and ``dist_sort``
+(``shard_map`` over a real device mesh) — each with its own method knob
+(``paper``/``sampled``/``sample``/``hier``/``valiant``) and a bucket
+``capacity`` the caller had to guess.  ``SortEngine`` removes the guessing:
+
+1. **Stats inspection** (``estimate_stats``): a strided ≤1 k sample yields
+   ``sortedness`` (asc-pair minus desc-pair fraction), ``skew`` (max/mean of
+   an equal-width histogram — the quantity that breaks the paper's Array
+   Division Procedure), the top-duplicate fraction, and the *measured* max
+   bucket fraction under each splitter rule.  The labels map onto the
+   paper's §5 input taxonomy (random / sorted / reversed / local) plus the
+   beyond-paper duplicate-heavy class.
+
+2. **Dispatch** (``choose_plan``): stats × topology → execution path and
+   method.  The full decision table is DESIGN.md §4; the shape is
+   *mesh → dist (hier > valiant > sampled > paper), huge or heavily skewed
+   → host (exact ragged buckets), else → sim*.
+
+3. **Capacity autotune** (``autotune_capacity``): instead of the fixed
+   ``2·ceil(n/P)`` heuristic, capacity comes from the measured max bucket
+   fraction plus a 3σ binomial sampling-error term and a safety margin,
+   clamped below by the legacy heuristic (which is also the deterministic
+   answer for balanced inputs, keeping the jit cache warm) and quantized to
+   powers of two above it.  ``sort`` verifies the returned counts and
+   escalates capacity ×2 on the (rare) overflow, so the answer is always
+   exact.
+
+4. **Warm jit cache**: compiled executables are keyed on
+   ``(pow2 size bucket, capacity, method, dtype, P)``; inputs are padded to
+   the bucket and the valid length is passed as a *traced* scalar, so
+   repeated traffic of nearby sizes never recompiles.  ``trace_count``
+   exposes actual retraces for tests and monitoring.
+
+Batched entry points: ``sort_many`` vmaps the simulated path over a request
+batch; ``sort_pairs`` is the key/payload sort (bitonic pair kernel) behind
+``repro.serve.engine.ServeEngine``'s length-ordering hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition
+from repro.core.ohhc_sort import ohhc_sort_host
+from repro.core.topology import OHHCTopology
+from repro.kernels import ops
+
+# Granularity cap for stats histograms: coarser than P only ever
+# *over*-estimates the max bucket fraction (refining buckets can't raise it).
+_MAX_STAT_BUCKETS = 256
+
+
+# --------------------------------------------------------------------------
+# Input statistics
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputStats:
+    """Cheap sampled statistics of one sort request."""
+
+    n: int
+    dtype: str
+    sample_size: int
+    sortedness: float  # +1 ascending … −1 descending, ties neutral
+    skew: float  # max/mean of the equal-width histogram (1.0 = balanced)
+    dup_top_frac: float  # mass of the most frequent sampled value
+    f_max_paper: float  # measured max bucket fraction, equal-width rule
+    f_max_sampled: float  # measured max bucket fraction, sampled splitters
+    num_buckets: int  # histogram granularity the f_max fields used
+
+    @property
+    def label(self) -> str:
+        """Best-guess class in the paper's §5 taxonomy (+ 'dupes')."""
+        if self.sortedness > 0.8:
+            return "sorted"
+        if self.sortedness < -0.8:
+            return "reversed"
+        if self.dup_top_frac > 0.25:
+            return "dupes"
+        if self.skew > 4.0:
+            return "local"
+        return "random"
+
+    @property
+    def skewed(self) -> bool:
+        """True when equal-width ranges would overload some processor."""
+        return self.skew > 2.0 or self.dup_top_frac > 0.25
+
+
+def estimate_stats(
+    x, *, num_buckets: int = 64, sample_size: int = 2048
+) -> InputStats:
+    """Measure ``InputStats`` from an evenly spread sample (host, O(sample)).
+
+    Exactly ``min(n, sample_size)`` linspace-positioned elements: the sample
+    spans the whole array (order statistics like sortedness stay meaningful
+    on sorted inputs) and its size never halves across nearby ``n`` — a
+    stable ``s`` keeps the 3σ term in :func:`autotune_capacity`, and hence
+    the chosen capacity and jit-cache key, stable across a shape bucket.
+    """
+    x = np.asarray(x).ravel()
+    n = x.size
+    if n == 0:
+        return InputStats(0, str(x.dtype), 0, 1.0, 1.0, 0.0, 0.0, 0.0, num_buckets)
+    s = int(min(n, sample_size))
+    idx = (np.arange(s, dtype=np.int64) * n) // s
+    sample = x[idx].astype(np.float64)
+    diffs = np.diff(sample)
+    sortedness = (
+        float(np.mean(diffs > 0) - np.mean(diffs < 0)) if diffs.size else 1.0
+    )
+    _, uniq_counts = np.unique(sample, return_counts=True)
+    dup_top_frac = float(uniq_counts.max()) / s
+
+    B = int(min(num_buckets, _MAX_STAT_BUCKETS))
+    lo, hi = sample.min(), sample.max()
+    width = (hi - lo) / B
+    if width <= 0:
+        ids = np.zeros(s, np.int64)
+    else:
+        ids = np.clip(((sample - lo) / width).astype(np.int64), 0, B - 1)
+    counts = np.bincount(ids, minlength=B)
+    f_max_paper = float(counts.max()) / s
+    skew = f_max_paper * B  # max / (s/B)
+
+    srt = np.sort(sample)
+    splitters = srt[(np.arange(1, B) * s) // B]
+    ids2 = np.searchsorted(splitters, sample, side="right")
+    f_max_sampled = float(np.bincount(ids2, minlength=B).max()) / s
+
+    return InputStats(
+        n=n,
+        dtype=str(x.dtype),
+        sample_size=s,
+        sortedness=sortedness,
+        skew=float(skew),
+        dup_top_frac=dup_top_frac,
+        f_max_paper=f_max_paper,
+        f_max_sampled=f_max_sampled,
+        num_buckets=B,
+    )
+
+
+# --------------------------------------------------------------------------
+# Dispatch policy (pure — DESIGN.md §4 decision table)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SortPlan:
+    path: str  # 'sim' | 'host' | 'dist'
+    method: str  # sim/host: 'paper'|'sampled'; dist: +'hier'|'valiant'|'sample'
+    capacity: int | None  # sim only: static per-bucket buffer length
+    padded_n: int | None  # sim only: pow2 shape bucket the input pads to
+    reason: str
+
+
+def autotune_capacity(
+    stats: InputStats,
+    method: str,
+    num_buckets: int,
+    padded_n: int,
+    *,
+    margin: float = 1.25,
+) -> int:
+    """Bucket capacity from the *measured* overflow model.
+
+    Target load is ``f̂·margin·padded_n`` with ``f̂`` the measured max
+    bucket fraction of the sample (for ``n ≤ sample_size`` the sample is
+    the whole array, so f̂ is exact; beyond that the ×1.25 margin covers
+    ~2σ of binomial sampling error for any f̂ the quantization doesn't
+    already absorb — and ``SortEngine.sort``'s overflow-escalation loop
+    backstops the tail, so a model miss costs a retry, never correctness).
+    The legacy ``2·ceil(n/P)`` heuristic is both the floor — the
+    *deterministic* answer whenever the measurement stays under it, so
+    balanced traffic always lands on one capacity and one compiled
+    executable — and the quantization unit above it (bounds jit-cache
+    cardinality at ~P/2 steps while staying within one heuristic unit of
+    the measured need).
+    """
+    f_hat = stats.f_max_paper if method == "paper" else stats.f_max_sampled
+    base = min(partition.default_capacity(padded_n, num_buckets), padded_n)
+    raw = math.ceil(f_hat * margin * padded_n)
+    if raw <= base:
+        return base
+    cap = -(-raw // base) * base  # quantize up to a multiple of the heuristic
+    cap = min(cap, padded_n + (-padded_n) % 8)
+    return cap
+
+
+def choose_plan(
+    stats: InputStats,
+    topo: OHHCTopology,
+    *,
+    mesh_devices: int = 1,
+    mesh_axes: Sequence[str] = (),
+    host_threshold: int = 1 << 20,
+    margin: float = 1.25,
+) -> SortPlan:
+    """Stats × topology → (path, method, capacity).  Pure and unit-testable."""
+    P = topo.total_procs
+    if mesh_devices > 1:
+        if len(mesh_axes) >= 2:
+            return SortPlan(
+                "dist", "hier", None, None,
+                "multi-axis mesh: cross the slow (optical) tier exactly once",
+            )
+        if abs(stats.sortedness) > 0.8:
+            return SortPlan(
+                "dist", "valiant", None, None,
+                "pre-sorted input: two-hop routing kills direct-route send skew",
+            )
+        if stats.skewed:
+            return SortPlan(
+                "dist", "sample", None, None,
+                "value skew: balanced sampled splitters",
+            )
+        return SortPlan(
+            "dist", "paper", None, None,
+            "uniform input: faithful equal-width splitters, no sample gather",
+        )
+
+    method = "sampled" if (stats.skewed and stats.dup_top_frac <= 0.25) else "paper"
+    if stats.dup_top_frac > 0.25:
+        # A dominant duplicate value defeats *every* splitter rule equally;
+        # equal-width is cheaper, capacity autotune absorbs the hot bucket.
+        method = "paper"
+    # Host path: ragged buckets are exact under any splitter, so balanced
+    # splitters buy nothing at wall-clock — equal-width ids are cheaper to
+    # compute and total local-sort work is the same.  'sampled' only pays
+    # on the sim path, where it prevents static-capacity blowup.
+    if stats.n >= host_threshold:
+        return SortPlan(
+            "host", "paper", None, None,
+            f"n={stats.n} ≥ host threshold: exact ragged buckets, no pad waste",
+        )
+    if stats.skewed and stats.n > (1 << 16):
+        return SortPlan(
+            "host", "paper", None, None,
+            "large skewed input: dense (P, capacity) buffer would dwarf n",
+        )
+    padded_n = ops.bucketed_length(stats.n)
+    cap = autotune_capacity(stats, method, P, padded_n, margin=margin)
+    return SortPlan(
+        "sim", method, cap, padded_n,
+        f"{stats.label} input on the jit path, capacity={cap}",
+    )
+
+
+# --------------------------------------------------------------------------
+# jit-able padded simulated sort (the engine's compiled unit)
+# --------------------------------------------------------------------------
+def _sim_fill(dtype):
+    return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else jnp.inf
+
+
+def _sim_low(dtype):
+    return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf
+
+
+def _sim_sort_padded(
+    x_pad: jax.Array,
+    n_valid: jax.Array,
+    *,
+    P: int,
+    capacity: int,
+    method: str,
+    sample_size: int,
+    local_sort: Callable[[jax.Array], jax.Array],
+):
+    """Sort the valid prefix of a padded buffer on P simulated processors.
+
+    Shapes are static (``x_pad`` is a pow2 bucket, ``capacity`` static);
+    ``n_valid`` is traced, so every length in the bucket shares one
+    executable.  Invalid tail elements route to an overflow row (bucket P)
+    that is dropped — they never pollute counts or splitters.  Returns
+    ``(out, counts)`` with the sorted valid prefix in ``out[:n_valid]``.
+    """
+    n_pad = x_pad.shape[0]
+    dtype = x_pad.dtype
+    fill = _sim_fill(dtype)
+    pos = jnp.arange(n_pad)
+    valid = pos < n_valid
+    if method == "paper":
+        ftype = jnp.float32
+        lo = jnp.min(jnp.where(valid, x_pad, fill)).astype(ftype)
+        hi = jnp.max(jnp.where(valid, x_pad, _sim_low(dtype))).astype(ftype)
+        width = (hi - lo) / P
+        width = jnp.where(width > 0, width, 1.0)
+        ids = jnp.clip(
+            jnp.floor((x_pad.astype(ftype) - lo) / width), 0, P - 1
+        ).astype(jnp.int32)
+    elif method == "sampled":
+        s = int(min(n_pad, sample_size))
+        # Strided gather over the *valid* region only (dynamic indices are
+        # jit/vmap-safe; float step avoids int overflow for large buckets).
+        idx = jnp.clip(
+            (jnp.arange(s) * (n_valid / s)).astype(jnp.int32), 0, n_valid - 1
+        )
+        sample = jnp.sort(x_pad[idx])
+        splitters = sample[(np.arange(1, P) * s) // P]
+        ids = partition.splitter_bucket_ids(x_pad, splitters)
+    else:
+        raise ValueError(f"unknown sim method {method!r}")
+    ids = jnp.where(valid, ids, P)  # row P = drop row for the pad tail
+    buckets, counts = partition.scatter_to_buckets(
+        jnp.where(valid, x_pad, fill), ids, P + 1, capacity, fill_value=fill
+    )
+    buckets, counts = buckets[:P], counts[:P]
+    buckets = jax.vmap(local_sort)(buckets)
+    out = partition.unscatter(buckets, counts, n_pad)
+    return out, counts
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+class SortEngine:
+    """Auto-dispatching, capacity-autotuning, compile-cache-warm sorter.
+
+    Parameters
+    ----------
+    topo:            OHHC instance for the simulated/host paths (default 1-D
+                     full, 36 processors).
+    mesh/axis_names: when given (and the mesh has >1 device), large requests
+                     dispatch to ``dist_sort`` over the mesh.
+    host_threshold:  sizes ≥ this go to the exact numpy path.
+    local_sort:      per-bucket sorter for the sim path (default
+                     ``jnp.sort``; pass ``ops.make_local_sort()`` on TPU).
+    """
+
+    def __init__(
+        self,
+        topo: OHHCTopology | None = None,
+        *,
+        mesh=None,
+        axis_names: Sequence[str] = ("data",),
+        host_threshold: int = 1 << 20,
+        sample_size: int = 2048,
+        margin: float = 1.25,
+        local_sort: Callable[[jax.Array], jax.Array] | None = None,
+    ):
+        self.topo = topo if topo is not None else OHHCTopology(1, "full")
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        self.host_threshold = int(host_threshold)
+        self.sample_size = int(sample_size)
+        self.margin = float(margin)
+        self.local_sort = local_sort if local_sort is not None else jnp.sort
+        self._fn_cache: dict[tuple, Callable] = {}
+        self.trace_count = 0  # incremented once per actual jit trace
+        self.last_report: dict | None = None
+
+    # -------------------------------------------------------------- planning
+    def stats(self, x) -> InputStats:
+        B = min(self.topo.total_procs, _MAX_STAT_BUCKETS)
+        return estimate_stats(x, num_buckets=B, sample_size=self.sample_size)
+
+    def plan(self, x, stats: InputStats | None = None) -> SortPlan:
+        stats = stats if stats is not None else self.stats(x)
+        mesh_devices = int(self.mesh.devices.size) if self.mesh is not None else 1
+        return choose_plan(
+            stats,
+            self.topo,
+            mesh_devices=mesh_devices,
+            mesh_axes=self.axis_names if self.mesh is not None else (),
+            host_threshold=self.host_threshold,
+            margin=self.margin,
+        )
+
+    # -------------------------------------------------------------- jit cache
+    def _get_sim_fn(self, padded_n: int, capacity: int, method: str, dtype, batched: bool):
+        key = ("batch" if batched else "sim", padded_n, capacity, method, str(dtype))
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            def traced(x_pad, n_valid):
+                self.trace_count += 1  # runs at trace time only
+                return _sim_sort_padded(
+                    x_pad,
+                    n_valid,
+                    P=self.topo.total_procs,
+                    capacity=capacity,
+                    method=method,
+                    sample_size=min(self.sample_size, padded_n),
+                    local_sort=self.local_sort,
+                )
+
+            fn = jax.jit(jax.vmap(traced) if batched else traced)
+            self._fn_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------ sort
+    def sort(self, x, *, plan: SortPlan | None = None) -> np.ndarray:
+        """Globally sort ``x``; always exact (overflow escalates capacity).
+
+        Keys must be NaN-free: like every range-partitioning sort in this
+        repo, NaN poisons the min/max splitter computation (NaN also
+        compares after the +inf pad fill, so such elements can vanish from
+        the valid prefix).  Pre-filter NaNs before sorting float keys.
+        """
+        x_np = np.asarray(x).ravel()
+        n = x_np.size
+        if n <= 1:
+            self.last_report = {"plan": None, "n": n, "overflow_retries": 0}
+            return x_np.copy()
+        # Stats are only measured when something consumes them: planning
+        # (no explicit plan) or the dist path's capacity factor.  A forced
+        # sim/host plan skips the sample entirely.
+        stats = None
+        if plan is None:
+            stats = self.stats(x_np)
+            plan = self.plan(x_np, stats)
+        if plan.path == "host":
+            r = ohhc_sort_host(x_np, self.topo, method=plan.method)
+            self.last_report = {
+                "plan": plan, "n": n, "stats": stats, "overflow_retries": 0,
+                "counts_sum": int(r.bucket_sizes.sum()),
+            }
+            return r.sorted_array
+        if plan.path == "dist":
+            return self._sort_dist(x_np, plan, stats)
+        return self._sort_sim(x_np, plan, stats)
+
+    def _sort_sim(self, x_np: np.ndarray, plan: SortPlan, stats) -> np.ndarray:
+        n = x_np.size
+        padded_n = plan.padded_n or ops.bucketed_length(n)
+        capacity = plan.capacity or partition.default_capacity(padded_n, self.topo.total_procs)
+        x_pad = np.zeros(padded_n, x_np.dtype)
+        x_pad[:n] = x_np
+        xj = jnp.asarray(x_pad)
+        retries = 0
+        while True:
+            fn = self._get_sim_fn(padded_n, capacity, plan.method, x_np.dtype, False)
+            out, counts = fn(xj, n)
+            got = int(jnp.sum(counts))
+            if got == n:
+                break
+            # Measured-model miss: escalate capacity (×2, cap at padded_n —
+            # which by construction cannot overflow) and re-run.
+            if capacity >= padded_n:
+                raise AssertionError("overflow with capacity == padded_n")
+            capacity = min(padded_n, capacity * 2)
+            capacity += (-capacity) % 8
+            retries += 1
+        self.last_report = {
+            "plan": plan, "n": n, "stats": stats, "capacity_used": capacity,
+            "counts_sum": got, "overflow_retries": retries,
+        }
+        return np.asarray(out)[:n]
+
+    # --------------------------------------------------------------- batched
+    def sort_many(self, xs: Sequence) -> list[np.ndarray]:
+        """Sort a batch of arrays with ONE vmapped executable.
+
+        All rows pad to the batch's common pow2 shape bucket; capacity/method
+        come from the worst row so a single compiled program serves the whole
+        batch (the serve-traffic shape: many similar-length requests).
+        """
+        arrs = [np.asarray(a).ravel() for a in xs]
+        if not arrs:
+            return []
+        dtype = arrs[0].dtype
+        if any(a.dtype != dtype for a in arrs):
+            raise ValueError("sort_many requires a homogeneous dtype batch")
+        max_n = max(a.size for a in arrs)
+        if max_n <= 1:
+            return [a.copy() for a in arrs]
+        padded_n = ops.bucketed_length(max_n)
+        P = self.topo.total_procs
+        per_stats = [self.stats(a) for a in arrs]
+        method = "sampled" if any(
+            s.skewed and s.dup_top_frac <= 0.25 for s in per_stats
+        ) else "paper"
+        capacity = max(
+            autotune_capacity(s, method, P, padded_n, margin=self.margin)
+            for s in per_stats
+        )
+        batch = np.zeros((len(arrs), padded_n), dtype)
+        for i, a in enumerate(arrs):
+            batch[i, : a.size] = a
+        ns = np.asarray([a.size for a in arrs], np.int32)
+        xj = jnp.asarray(batch)
+        retries = 0
+        while True:
+            fn = self._get_sim_fn(padded_n, capacity, method, dtype, True)
+            out, counts = fn(xj, jnp.asarray(ns))
+            per_row = np.asarray(jnp.sum(counts, axis=-1))
+            if np.array_equal(per_row, ns):
+                break
+            if capacity >= padded_n:
+                raise AssertionError("overflow with capacity == padded_n")
+            capacity = min(padded_n, capacity * 2)
+            capacity += (-capacity) % 8
+            retries += 1
+        self.last_report = {
+            "plan": SortPlan("sim", method, capacity, padded_n, "sort_many batch"),
+            "n": int(ns.sum()), "overflow_retries": retries,
+            "batch": len(arrs),
+        }
+        out_np = np.asarray(out)
+        return [out_np[i, : a.size].copy() for i, a in enumerate(arrs)]
+
+    def sort_pairs(self, keys, vals):
+        """Key/payload sort with the bitonic pair kernel + warm shape cache.
+
+        The serving hot path (length-ordering a request batch) calls this
+        with a different batch size every tick; pow2 bucketing makes all of
+        them share a handful of executables instead of one per size.
+        """
+        keys = jnp.asarray(keys).ravel()
+        vals = jnp.asarray(vals).ravel()
+        n = keys.shape[0]
+        if n <= 1:
+            return keys, vals
+        n_pad = ops.bucketed_length(n)
+        key = ("pairs", n_pad, str(keys.dtype), str(vals.dtype))
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            def traced(k, v):
+                self.trace_count += 1
+                return ops.local_sort_pairs(k, v)
+
+            fn = jax.jit(traced)
+            self._fn_cache[key] = fn
+        fill = _sim_fill(keys.dtype)
+        kp = jnp.concatenate([keys, jnp.full((n_pad - n,), fill, keys.dtype)])
+        vp = jnp.concatenate([vals, jnp.zeros((n_pad - n,), vals.dtype)])
+        ks, vs = fn(kp, vp)
+        return ks[:n], vs[:n]
+
+    # ------------------------------------------------------------------ dist
+    def _sort_dist(self, x_np: np.ndarray, plan: SortPlan, stats) -> np.ndarray:
+        from repro.core.dist_sort import dist_sort
+
+        if stats is None:
+            stats = self.stats(x_np)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        num_shards = 1
+        for ax in self.axis_names:
+            num_shards *= sizes[ax]
+        n = x_np.size
+        pad = (-n) % num_shards
+        if pad:
+            fill = (
+                np.iinfo(x_np.dtype).max
+                if np.issubdtype(x_np.dtype, np.integer)
+                else np.inf
+            )
+            x_np = np.concatenate([x_np, np.full(pad, fill, x_np.dtype)])
+        f_hat = stats.f_max_sampled if plan.method != "paper" else stats.f_max_paper
+        cf = max(2.0, self.margin * f_hat * num_shards * 2.0)
+        xj = jnp.asarray(x_np)
+        retries = 0
+        while True:
+            vals, counts = dist_sort(
+                xj,
+                mesh=self.mesh,
+                axis_names=self.axis_names,
+                method=plan.method,
+                capacity_factor=cf,
+            )
+            counts = np.asarray(counts).ravel()
+            if int(counts.sum()) == x_np.size:
+                break
+            # Overflow drops elements (dist_sort contract); escalate like
+            # the sim path.  cf == num_shards cannot overflow: every dest
+            # row then holds a sender's whole shard.
+            if cf >= num_shards:
+                raise AssertionError("dist overflow at capacity_factor == shards")
+            cf = min(float(num_shards), cf * 2.0)
+            retries += 1
+        vals = np.asarray(vals)
+        shards = np.split(vals, counts.size)
+        out = np.concatenate(
+            [sh[: int(c)] for sh, c in zip(shards, counts)]
+        )
+        self.last_report = {
+            "plan": plan, "n": n, "stats": stats,
+            "counts_sum": int(counts.sum()), "overflow_retries": retries,
+        }
+        return out[:n]

@@ -92,8 +92,7 @@ def ohhc_sort_sim(
     n = x.shape[0]
     P = topo.total_procs
     if capacity is None:
-        capacity = int(-(-2 * n // P))
-        capacity += (-capacity) % 8
+        capacity = partition.default_capacity(n, P)
     if method == "paper":
         ids = partition.paper_bucket_ids(x, P)
     elif method == "sampled":

@@ -24,6 +24,17 @@ import jax
 import jax.numpy as jnp
 
 
+def default_capacity(n: int, num_buckets: int) -> int:
+    """The legacy fixed bucket capacity: ``2·ceil(n/P)`` rounded up to 8.
+
+    Safe for near-uniform inputs only; ``repro.core.engine`` replaces it
+    with a measured estimate (DESIGN.md §4) and keeps this as the floor.
+    """
+    cap = int(-(-2 * n // num_buckets))
+    cap += (-cap) % 8
+    return cap
+
+
 def paper_bucket_ids(x: jax.Array, num_buckets: int) -> jax.Array:
     """§3.1: equal-width value-range bucket ids in ``[0, num_buckets)``."""
     x = jnp.asarray(x)

@@ -15,6 +15,12 @@ import numpy as np
 
 DISTRIBUTIONS = ("random", "sorted", "reversed", "local")
 
+# Beyond-paper: duplicate-heavy traffic (a handful of distinct values with a
+# zipf-like mass).  Every splitter rule collapses on the dominant value —
+# only capacity autotuning (DESIGN.md §4) survives it — so the engine tests
+# and benchmarks include it alongside the paper's four.
+ALL_DISTRIBUTIONS = DISTRIBUTIONS + ("dupes",)
+
 # Paper sizes: 10..60 MB of int32 → 2.62M..15.73M elements.
 PAPER_SIZES_MB = (10, 20, 30, 40, 50, 60)
 
@@ -31,6 +37,13 @@ def make_array(dist: str, n: int, seed: int = 0, dtype=np.int32) -> np.ndarray:
         x = np.sort(rng.integers(0, np.iinfo(np.int32).max, n, dtype=np.int64))
     elif dist == "reversed":
         x = np.sort(rng.integers(0, np.iinfo(np.int32).max, n, dtype=np.int64))[::-1]
+    elif dist == "dupes":
+        # 16 distinct values, zipf-weighted: the most frequent value carries
+        # ~a third of the array, so one bucket holds ≫ n/P regardless of the
+        # splitter rule.
+        vals = rng.integers(0, np.iinfo(np.int32).max, 16, dtype=np.int64)
+        w = 1.0 / np.arange(1, 17)
+        x = rng.choice(vals, size=n, p=w / w.sum())
     elif dist == "local":
         # tight gaussian cluster in the middle of the int range + a thin
         # uniform tail so min/max span the full range (worst case for

@@ -43,13 +43,27 @@ def _next_pow2(n: int) -> int:
     return 1 << max((n - 1).bit_length(), 0)
 
 
+def bucketed_length(n: int, *, min_size: int = MIN_TILE) -> int:
+    """Power-of-two shape bucket for ``n`` (≥ ``min_size``).
+
+    The shared shape-bucketing rule: the bitonic kernels pad to this length
+    internally, and ``repro.core.engine.SortEngine`` keys its warm jit cache
+    on it so any two lengths in the same bucket reuse one compilation.
+    """
+    return max(_next_pow2(max(n, 1)), min_size)
+
+
 def local_sort(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
-    """Sort a flat array with the bitonic kernel(s).  Returns same length."""
+    """Sort a flat array with the bitonic kernel(s).  Returns same length.
+
+    Pads to the shape bucket with the dtype max, so the pad tail sorts to
+    the end and slicing ``[:n]`` recovers the sorted input.
+    """
     interpret = _auto_interpret(interpret)
     n = x.shape[0]
     if n <= 1:
         return x
-    n_pad = max(_next_pow2(n), MIN_TILE)
+    n_pad = bucketed_length(n)
     xp = jnp.concatenate([x, jnp.full((n_pad - n,), _fill_value(x.dtype), x.dtype)])
     if n_pad <= MAX_TILE:
         return bitonic.sort_tile(xp, interpret=interpret)[:n]
@@ -73,7 +87,7 @@ def local_sort_pairs(
     """Sort (key, payload) pairs by key.  Single-tile sizes (≤ MAX_TILE)."""
     interpret = _auto_interpret(interpret)
     n = keys.shape[0]
-    n_pad = max(_next_pow2(n), MIN_TILE)
+    n_pad = bucketed_length(n)
     if n_pad > MAX_TILE:
         raise ValueError(f"local_sort_pairs supports n ≤ {MAX_TILE}, got {n}")
     kp = jnp.concatenate(

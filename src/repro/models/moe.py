@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import partition as core_partition
 from repro.models.common import AxisRules, dense_init, shard, split_keys
 
@@ -106,7 +107,7 @@ def _moe_shard_map(p, x, cfg, rules, top_p, top_e):
     the optical tier isn't crossed at all.
     """
     m = cfg.moe
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_ambient_mesh()
     if mesh is None or not mesh.shape or rules.tensor not in mesh.shape:
         # no mesh context (CPU tests): same math, local
         return None
@@ -152,7 +153,7 @@ def _moe_shard_map(p, x, cfg, rules, top_p, top_e):
     from jax.sharding import PartitionSpec as PS
 
     bspec = PS(batch_axes or None, None, None)
-    out = jax.shard_map(
+    out = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -164,7 +165,6 @@ def _moe_shard_map(p, x, cfg, rules, top_p, top_e):
             PS(None, tensor_ax, None),
         ),
         out_specs=bspec,
-        check_vma=False,
     )(x, top_p, top_e, p["wi"], p["wg"], p["wo"])
     return out
 

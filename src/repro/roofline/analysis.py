@@ -181,7 +181,9 @@ def roofline_from_compiled(
     model_flops: float | None = None,
 ) -> dict:
     """The §Roofline record for one (arch × shape × mesh) cell."""
-    ca = compiled.cost_analysis()
+    from repro import compat
+
+    ca = compat.cost_analysis(compiled)
     flops_dev = float(ca.get("flops", 0.0))
     bytes_dev = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_forward(
     stacked_params,
@@ -92,12 +94,11 @@ def pipeline_forward(
         )
         return out[None]
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         stage_body,
         mesh=mesh,
         in_specs=(P(pipe_axis), P(None)),
         out_specs=P(None),
-        check_vma=False,
     )
     # add the leading replicated axis expected by out[None]
     return fn(per_stage, x[None])[0]

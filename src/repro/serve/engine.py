@@ -1,10 +1,13 @@
 """Batched serving engine: prefill + decode with continuous-batch shaping.
 
 Batch formation uses the paper's technique: requests are **sorted by
-prompt length** with the framework's sort primitive
-(``repro.kernels.ops.local_sort_pairs`` — the bitonic pair-sort kernel),
-so each padded prefill batch wastes the minimum number of pad tokens —
-the serving-side face of the Array Division Procedure (DESIGN.md §3).
+prompt length** with the framework's sort primitive — now routed through
+``repro.core.engine.SortEngine.sort_pairs`` (the bitonic pair-sort kernel
+behind a power-of-two shape-bucketed jit cache, DESIGN.md §4), so each
+padded prefill batch wastes the minimum number of pad tokens — the
+serving-side face of the Array Division Procedure (DESIGN.md §3) — and a
+stream of varying batch sizes reuses a handful of compiled executables
+instead of recompiling per size.
 """
 
 from __future__ import annotations
@@ -16,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels import ops
+from repro.core.engine import SortEngine
 from repro.models.common import AxisRules, NO_SHARD
 
 
@@ -29,10 +32,11 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, model_api, *, rules: AxisRules = NO_SHARD,
-                 max_len: int = 512):
+                 max_len: int = 512, sorter: SortEngine | None = None):
         self.cfg, self.params, self.api = cfg, params, model_api
         self.rules = rules
         self.max_len = max_len
+        self.sorter = sorter if sorter is not None else SortEngine()
         self._prefill = jax.jit(
             lambda p, b, c: model_api.prefill(p, b, cfg, rules, c)
         )
@@ -42,10 +46,10 @@ class ServeEngine:
 
     # ------------------------------------------------------- batch formation
     def order_by_length(self, requests: list[Request]) -> list[Request]:
-        """Sort requests by prompt length using the bitonic pair-sort kernel."""
+        """Sort requests by prompt length via the engine's warm pair-sort path."""
         lens = jnp.asarray([len(r.prompt) for r in requests], jnp.int32)
         idx = jnp.arange(len(requests), dtype=jnp.int32)
-        _, order = ops.local_sort_pairs(lens, idx)
+        _, order = self.sorter.sort_pairs(lens, idx)
         return [requests[int(i)] for i in np.asarray(order)]
 
     def _pad_batch(self, requests: list[Request]):

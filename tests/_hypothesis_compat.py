@@ -1,0 +1,74 @@
+"""Property-testing facade: real ``hypothesis`` when installed, else a
+minimal deterministic fallback.
+
+``hypothesis`` is a declared test dependency (pyproject ``[test]`` extra)
+and CI installs it, but hermetic containers may not have it; the fallback
+runs each ``@given`` test against ``max_examples`` seeded-random draws so
+the property tests keep their coverage instead of skipping wholesale.
+
+Only the strategy surface the suite uses is implemented:
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``, with ``@given``
+taking keyword strategies and ``@settings(max_examples=..., deadline=...)``
+applied *under* ``@given`` (the order every test in this repo uses).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n_examples = getattr(fn, "_max_examples", 10)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                for _ in range(n_examples):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (it inspects __signature__).
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items() if name not in strategies
+                ]
+            )
+            return wrapper
+
+        return deco

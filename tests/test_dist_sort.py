@@ -13,7 +13,9 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import dist_sort, host_check_globally_sorted
 from repro.data.distributions import make_array
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+
+mesh = compat.make_mesh((8,), ("data",))
 def exact(v, c, n8):
     vals = np.asarray(v).reshape(8, -1); cc = np.asarray(c).ravel()
     return np.concatenate([np.sort(vals[i])[:cc[i]] for i in range(8)])
@@ -32,7 +34,7 @@ for dist in ["random", "sorted", "reversed", "local"]:
             # detectable as dropped elements, never silent corruption
             assert host_check_globally_sorted(np.asarray(v), np.asarray(c))
 
-mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = compat.make_mesh((2, 4), ("pod", "data"))
 x = make_array("random", 8192, seed=5)
 v, c = dist_sort(jnp.asarray(x), mesh=mesh2, axis_names=("pod", "data"),
                  method="hier", capacity_factor=8.0)

@@ -1,0 +1,23 @@
+"""Docs contract: every ``DESIGN.md §n`` citation in the tree resolves
+(same check CI runs via ``tools/check_design_refs.py``)."""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_design_references_resolve():
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_design_refs.py")],
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_core_docs_exist():
+    for name in ("DESIGN.md", "README.md", "benchmarks/README.md"):
+        assert (ROOT / name).exists(), name

@@ -13,6 +13,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.configs import registry
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.launch import sharding as SH
@@ -20,7 +21,7 @@ from repro.models.common import AxisRules
 from repro.roofline.analysis import collective_bytes, roofline_from_compiled
 from repro.train.train_step import make_train_step, init_train_state
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = compat.make_mesh((2,2,2), ("pod","data","model"))
 cfg = registry.get_config("minitron-4b", smoke=True)
 shape = ShapeConfig("t", 32, 8, "train")
 rules = SH.rules_for(cfg, shape, mesh)
@@ -33,7 +34,7 @@ pspecs = SH.sanitize_specs(api.param_specs(cfg, rules, 2), jax.eval_shape(lambda
 sspecs = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs, "count": P()}, "step": P()}
 in_specs = registry.input_specs(cfg, shape)
 bspecs = SH.sanitize_specs(SH.batch_specs(cfg, shape, rules), in_specs, mesh)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     step = make_train_step(cfg, run, api, rules)
     jitted = jax.jit(step, in_shardings=(SH.named(sspecs,mesh), SH.named(bspecs,mesh)),
                      out_shardings=(SH.named(sspecs,mesh), None), donate_argnums=(0,))
@@ -52,7 +53,7 @@ def hier(x): return hierarchical_psum(x, fast_axis="data", slow_axis="pod")
 xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
 cb = {}
 for name, fn in [("flat", flat), ("hier", hier)]:
-    f = jax.shard_map(fn, mesh=mesh, in_specs=P(None, "model"), out_specs=P(None, "model"), check_vma=False)
+    f = compat.shard_map(fn, mesh=mesh, in_specs=P(None, "model"), out_specs=P(None, "model"))
     comp = jax.jit(f).lower(xs).compile()
     cb[name] = collective_bytes(comp.as_text(), num_devices=8, pod_block=4)
 print("flat inter:", cb["flat"]["inter_pod"], "hier inter:", cb["hier"]["inter_pod"])

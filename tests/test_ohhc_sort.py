@@ -4,7 +4,7 @@ counters behaviour (Figs 6.20–6.24), cost-model sanity."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     LinkModel,

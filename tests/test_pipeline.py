@@ -10,9 +10,10 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.runtime.pipeline import pipeline_forward, bubble_fraction
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("pipe",))
 L, M, mb, d = 8, 6, 2, 16
 key = jax.random.PRNGKey(0)
 W = jax.random.normal(key, (L, d, d)) * 0.3

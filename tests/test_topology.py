@@ -1,7 +1,7 @@
 """OHHC topology invariants vs the paper's Table 1.1 and link rules."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.topology import HHC_SIZE, OHHCTopology, hhc_cell_edges, table_1_1
 

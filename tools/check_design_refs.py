@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Docs contract check: every ``DESIGN.md §n`` reference must resolve.
+
+Scans ``src/``, ``tests/``, ``benchmarks/``, and ``examples/`` for
+``DESIGN.md §<n>`` citations and verifies a ``§<n>`` section heading exists
+in ``DESIGN.md``.  Exits non-zero listing any dangling references (CI runs
+this; ``tests/test_docs_refs.py`` runs it under pytest too).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADING_RE = re.compile(r"^#+\s*§(\d+)\b", re.MULTILINE)
+
+
+def defined_sections() -> set[int]:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        return set()
+    return {int(m) for m in HEADING_RE.findall(design.read_text())}
+
+
+def find_references() -> list[tuple[str, int, int]]:
+    """All (relative path, line number, section) citations in the tree."""
+    refs = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            for lineno, line in enumerate(
+                path.read_text(errors="replace").splitlines(), 1
+            ):
+                for m in REF_RE.finditer(line):
+                    refs.append(
+                        (str(path.relative_to(ROOT)), lineno, int(m.group(1)))
+                    )
+    return refs
+
+
+def main() -> int:
+    sections = defined_sections()
+    refs = find_references()
+    dangling = [(p, ln, s) for p, ln, s in refs if s not in sections]
+    if not sections:
+        print("check_design_refs: DESIGN.md missing or has no § headings")
+        return 1
+    if dangling:
+        for p, ln, s in dangling:
+            print(f"DANGLING: {p}:{ln} cites DESIGN.md §{s} (not defined)")
+        print(
+            f"check_design_refs: {len(dangling)} dangling of {len(refs)} refs; "
+            f"defined sections: {sorted(sections)}"
+        )
+        return 1
+    print(
+        f"check_design_refs: OK — {len(refs)} references, "
+        f"all resolve to sections {sorted(sections)}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
