@@ -2,8 +2,11 @@
 
 Reports, for every (dimension × variant): the paper's 12·G·d_h−2 formula,
 the actual spanning-tree send count (2·(G·P−1)), the critical-path rounds
-(= 2·d_h+3, the topology diameter), and the analytic comm-time comparison
-paper-schedule vs fused all-to-all (beyond-paper)."""
+(= 2·d_h+3, the topology diameter), the analytic comm-time comparison
+paper-schedule vs fused all-to-all (beyond-paper), and — since the
+``repro.net`` simulator exists — the *measured* link-level gather time
+with its simulated-vs-analytic delta (0 in barrier mode; the dependency
+mode's round count exposes the half variant's one-round slack)."""
 
 from __future__ import annotations
 
@@ -11,15 +14,31 @@ from benchmarks.common import DIMS, emit
 from repro.core import OHHCTopology
 from repro.core.sample_sort import compare_schedules
 from repro.core.schedule import AccumulationSchedule
+from repro.net.links import LinkModel
+from repro.net.sim import simulate_gather
 
 
 def run(paper: bool = False) -> dict:
     out = {}
+    n_total = 2_621_440
     for variant in ("full", "half"):
         for d_h in DIMS:
             topo = OHHCTopology(d_h, variant)
             s = AccumulationSchedule.build(topo)
-            cmp = compare_schedules(topo, n_total=2_621_440)
+            cmp = compare_schedules(topo, n_total=n_total)
+            chunk = n_total // topo.total_procs
+            sim = simulate_gather(
+                topo, link_model=LinkModel(), chunk_sizes=chunk, barrier=True
+            )
+            sim_dep = simulate_gather(
+                topo, link_model=LinkModel(), chunk_sizes=chunk
+            )
+            analytic_one_way = cmp["paper_schedule_s"] / 2.0
+            delta = (
+                abs(sim.total_time_s - analytic_one_way) / analytic_one_way
+                if analytic_one_way > 0
+                else 0.0
+            )
             out[(variant, d_h)] = (s.paper_step_count(), s.roundtrip_send_count())
             emit(
                 f"thm3/commsteps/{variant}/d{d_h}",
@@ -27,6 +46,9 @@ def run(paper: bool = False) -> dict:
                 f"paper_formula={s.paper_step_count()};"
                 f"tree_roundtrip={s.roundtrip_send_count()};"
                 f"critical_rounds={s.critical_path_rounds()};"
+                f"simulated_us={sim.total_time_s*1e6:.1f};"
+                f"sim_vs_analytic_delta={delta:.4f};"
+                f"sim_dep_us={sim_dep.total_time_s*1e6:.1f};"
                 f"fused_exchange_us={cmp['fused_exchange_s']*1e6:.1f};"
                 f"fused_speedup={cmp['speedup']:.1f}x",
             )

@@ -1,0 +1,50 @@
+"""netsim — event-driven link-level gather simulation (DESIGN.md §6).
+
+Per (variant × d_h): simulated gather makespan under the default
+electrical/optical ``LinkModel`` (barrier mode, directly comparable to the
+analytic Theorem-6 store-and-forward sum), the simulated-vs-analytic
+delta, the dependency-mode round count (the half variant's 1-round slack
+finding), link utilization, and the one-optical-link-down fault scenario's
+slowdown/reroute counters.
+
+``run(paper, json_path=...)`` also writes the full validation report (the
+CI artifact) when a path is given; ``python -m benchmarks.bench_netsim
+[out.json]`` does the same standalone.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import DIMS, emit
+from repro.net.report import netsim_report, write_json
+
+
+def run(paper: bool = False, json_path: "str | None" = None) -> dict:
+    # d_h=4 (2304-node full OHHC) only on --paper: all-pairs BFS for the
+    # diameter check dominates and the 1–3 rows already span the scaling.
+    dims = tuple(d for d in DIMS if paper or d <= 3)
+    chunk_elems = 16384 if paper else 1024
+    report = netsim_report(dims=dims, chunk_elems=chunk_elems)
+    for c in report["cases"]:
+        f = c["fault"]
+        emit(
+            f"netsim/gather/{c['variant']}/d{c['d_h']}",
+            c["sim_time_us"],
+            f"analytic_us={c['analytic_time_us']:.1f};"
+            f"delta={c['sim_vs_analytic_delta']:.4f};"
+            f"rounds={c['critical_rounds_simulated']};"
+            f"dep_rounds={c['dependency_rounds']};"
+            f"diameter={c['diameter_measured']}/{c['diameter_expected']};"
+            f"util_opt={c['link_utilization']['optical']:.3f};"
+            f"fault_slowdown={f['slowdown']:.2f}x;"
+            f"fault_reroutes={f['rerouted_messages']};"
+            f"fault_contention={f['contention_events']}",
+        )
+    if json_path:
+        write_json(report, json_path)
+    return report
+
+
+if __name__ == "__main__":
+    run(json_path=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -18,6 +18,7 @@ from benchmarks import (
     bench_engine,
     bench_kernels,
     bench_moe_dispatch,
+    bench_netsim,
     bench_parallel,
     bench_sequential,
     bench_speedup,
@@ -35,6 +36,7 @@ SUITES = {
     "kernels": lambda paper: bench_kernels.run(paper),
     "moe_dispatch": lambda paper: bench_moe_dispatch.run(paper),
     "engine": lambda paper: bench_engine.run(paper),  # autotuned dispatch
+    "netsim": lambda paper: bench_netsim.run(paper),  # link-level simulation
 }
 
 

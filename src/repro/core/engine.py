@@ -161,6 +161,10 @@ class SortPlan:
     capacity: int | None  # sim only: static per-bucket buffer length
     padded_n: int | None  # sim only: pow2 shape bucket the input pads to
     reason: str
+    # dist only: simulated one-way gather time over the OHHC link graph
+    # (repro.net, DESIGN.md §6) for this request's size — the measured-
+    # timeline comm-cost estimate attached to dispatch decisions.
+    comm_sim_s: float | None = None
 
 
 def autotune_capacity(
@@ -356,6 +360,7 @@ class SortEngine:
         self.margin = float(margin)
         self.local_sort = local_sort if local_sort is not None else jnp.sort
         self._fn_cache: dict[tuple, Callable] = {}
+        self._comm_sim_cache: dict[tuple, float] = {}
         self.trace_count = 0  # incremented once per actual jit trace
         self.last_report: dict | None = None
 
@@ -367,7 +372,7 @@ class SortEngine:
     def plan(self, x, stats: InputStats | None = None) -> SortPlan:
         stats = stats if stats is not None else self.stats(x)
         mesh_devices = int(self.mesh.devices.size) if self.mesh is not None else 1
-        return choose_plan(
+        plan = choose_plan(
             stats,
             self.topo,
             mesh_devices=mesh_devices,
@@ -375,6 +380,41 @@ class SortEngine:
             host_threshold=self.host_threshold,
             margin=self.margin,
         )
+        if plan.path == "dist":
+            plan = dataclasses.replace(
+                plan,
+                comm_sim_s=self.comm_cost_estimate(
+                    stats.n, itemsize=np.dtype(stats.dtype).itemsize
+                ),
+            )
+        return plan
+
+    def comm_cost_estimate(self, n: int, itemsize: int = 4) -> float:
+        """Simulated one-way gather time (s) for an ``n``-element request.
+
+        Runs the ``repro.net`` event-driven simulator (DESIGN.md §6) over
+        this engine's topology with even ``n/P`` chunks — the link-level
+        comm-cost estimate the dist path attaches to its dispatch
+        decisions.  Cached per pow2 size bucket so the estimate is as warm
+        as the jit cache it sits next to.
+        """
+        from repro.net.links import LinkModel
+        from repro.net.sim import simulate_gather
+
+        bucket = ops.bucketed_length(max(2, n))
+        key = ("netsim", bucket, itemsize)
+        t = self._comm_sim_cache.get(key)
+        if t is None:
+            chunk = -(-bucket // self.topo.total_procs)
+            t = simulate_gather(
+                self.topo,
+                link_model=LinkModel(),
+                chunk_sizes=chunk,
+                itemsize=itemsize,
+                barrier=True,
+            ).total_time_s
+            self._comm_sim_cache[key] = t
+        return t
 
     # -------------------------------------------------------------- jit cache
     def _get_sim_fn(self, padded_n: int, capacity: int, method: str, dtype, batched: bool):
@@ -585,5 +625,10 @@ class SortEngine:
         self.last_report = {
             "plan": plan, "n": n, "stats": stats,
             "counts_sum": int(counts.sum()), "overflow_retries": retries,
+            "comm_sim_s": (
+                plan.comm_sim_s
+                if plan.comm_sim_s is not None
+                else self.comm_cost_estimate(n, itemsize=x_np.dtype.itemsize)
+            ),
         }
         return out[:n]

@@ -11,10 +11,13 @@ Faithful construction of the interconnect from the paper (§1.4–1.5):
 * A **d_h-dimensional HHC** replaces every vertex of a (d_h−1)-dimensional
   hypercube with a 1-D HHC (Fig 1.2).  It therefore contains
   ``2**(d_h−1)`` HHC cells ("HHC groups") of 6 nodes each, i.e.
-  ``P(d_h) = 6·2**(d_h−1)`` processors.  Hypercube edges connect the
-  *head* (node 0) of each HHC cell to the head of the cell whose index
-  differs in one bit (this is the only inter-cell connectivity the
-  algorithm in Fig 3.2 uses).
+  ``P(d_h) = 6·2**(d_h−1)`` processors.  Hypercube edges connect *every*
+  node of a cell to the same-position node of the cell whose index differs
+  in one bit (the standard HHC construction: uniform degree
+  ``3 + (d_h−1)``, HHC diameter ``d_h + 1``, and hence OHHC diameter
+  ``2·d_h + 3 = 2·(d_h+1) + 1`` — the OTIS rule ``2·d(factor) + 1``).
+  The accumulation algorithm in Fig 3.2 only ever *uses* the head-to-head
+  links (node 0 of each cell), which are a subset of this wiring.
 
 * An **OHHC** is ``G`` HHC groups joined by optical OTIS links:
   node ``x`` of group ``y`` ↔ node ``y`` of group ``x`` (§3.2(c)).
@@ -126,20 +129,22 @@ class OHHCTopology:
                 out.append(cell * HHC_SIZE + b)
             elif node == b:
                 out.append(cell * HHC_SIZE + a)
-        # hypercube edges between cell heads (node 0 only)
-        if node == 0:
-            for bit in range(self.d_h - 1):
-                out.append((cell ^ (1 << bit)) * HHC_SIZE + 0)
+        # hypercube edges: every node links to its same-position counterpart
+        # in each bit-adjacent cell (uniform degree 3 + d_h − 1)
+        for bit in range(self.d_h - 1):
+            out.append((cell ^ (1 << bit)) * HHC_SIZE + node)
         return sorted(out)
 
     def optical_partner(self, group: int, local: int) -> tuple[int, int] | None:
-        """OTIS rule: node x of group y ↔ node y of group x (valid iff x < G)."""
-        if local < self.num_groups and not (local == group):
-            return (local, group)
-        if local == group and local < self.num_groups:
-            # self-transpose position: the OTIS rule maps (g,g) to itself; no link.
+        """OTIS rule: node x of group y ↔ node y of group x.
+
+        No link when ``local ≥ G`` (the half variant's upper nodes have no
+        transpose image) or at the self-transpose hole ``local == group``,
+        where the rule maps (g, g) to itself.
+        """
+        if local >= self.num_groups or local == group:
             return None
-        return None
+        return (local, group)
 
     def electrical_edges(self) -> Iterator[tuple[int, int]]:
         """All undirected electrical edges as (gid_a, gid_b), a < b."""
@@ -163,6 +168,17 @@ class OHHCTopology:
                         yield (a, b)
 
     # ---- diagnostics ---------------------------------------------------------
+    def electrical_edge_count_closed_form(self) -> int:
+        """Per group: 9 intra-cell edges per cell + 6·(d_h−1)/2 hypercube
+        edges per cell = 3·cells·(d_h+2); times G groups."""
+        return self.num_groups * 3 * self.num_hhc_cells * (self.d_h + 2)
+
+    def optical_edge_count_closed_form(self) -> int:
+        """One transpose link per unordered group pair: G·(G−1)/2 (the
+        diagonal (g,g) and, for the half variant, locals ≥ G have none)."""
+        g = self.num_groups
+        return g * (g - 1) // 2
+
     @functools.cached_property
     def summary(self) -> dict:
         return {

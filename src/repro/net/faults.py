@@ -1,0 +1,148 @@
+"""Link/node fault injection and degraded-schedule rebuilding (DESIGN.md §6).
+
+OTIS networks keep working when individual transpose links die — the
+fault-tolerance/Hamiltonicity analysis of arXiv:1109.1706 is the scenario
+axis this module opens for the OHHC.  Two complementary mechanisms:
+
+* **Implicit reroute** — hand ``simulate_schedule`` a faulted
+  :class:`Router`; any send whose direct link is dead is transparently
+  routed over a BFS-shortest alternative (store-and-forward, contention
+  counted).  ``RouteError`` propagates when no alternative exists — the
+  "fail" half of reroute-or-fail.
+
+* **Explicit degraded schedule** — :func:`rebuild_degraded` rewrites the
+  schedule itself: every send with a dead direct link becomes a chain of
+  single-hop relay ``Send``s (phase tagged ``<phase>+reroute``), each in
+  its own round.  The rebuilt schedule runs on the faulted graph with
+  **zero** simulator-level reroutes, which is how tests cross-check the
+  two mechanisms.  Relay sends follow *accumulation* semantics like every
+  other ``Send``: a relay node forwards **everything it holds** — its own
+  not-yet-sent chunk and any payload parked there by earlier rounds rides
+  along (payload coalescing, the same wait-count discipline the paper's
+  gather uses).  Delivery totals match the implicit mode exactly; the
+  per-message byte timeline intentionally differs (coalesced vs carried
+  end-to-end), which is itself a modelling choice worth comparing.
+
+Node faults: a failed *leaf* (a node that only ever sends) loses its data
+— the gather completes degraded, and the loss is visible in
+``SimResult.master_elems``.  A failed *internal* node of the accumulation
+tree (any send's destination) makes the gather impossible as scheduled,
+and :func:`rebuild_degraded` raises :class:`GatherImpossible` instead of
+silently dropping a subtree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.schedule import AccumulationSchedule, Send
+from repro.core.topology import OHHCTopology
+
+from repro.net.router import RouteError, Router
+
+
+class GatherImpossible(RuntimeError):
+    """The fault set breaks the accumulation tree beyond rerouting."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultScenario:
+    """A named set of dead links and nodes, in (group, local) addresses."""
+
+    name: str = "healthy"
+    failed_links: tuple = ()  # ((g, l), (g, l)) pairs, either order
+    failed_nodes: tuple = ()  # (g, l) addresses
+
+    def router(self, topo: OHHCTopology) -> Router:
+        links = [
+            (topo.global_id(*a), topo.global_id(*b)) for a, b in self.failed_links
+        ]
+        nodes = [topo.global_id(*n) for n in self.failed_nodes]
+        return Router(topo, failed_links=links, failed_nodes=nodes)
+
+    @classmethod
+    def optical_link_down(cls, g: int) -> "FaultScenario":
+        """The canonical scenario: group ``g``'s OTIS uplink (g,0)↔(0,g) dead."""
+        if g == 0:
+            # (0,0)↔(0,0) is the self-transpose hole, not a link — a "fault"
+            # here would silently simulate the healthy network.
+            raise ValueError("group 0 has no OTIS uplink to fail")
+        return cls(
+            name=f"optical_g{g}_down",
+            failed_links=(((g, 0), (0, g)),),
+        )
+
+
+def rebuild_degraded(
+    schedule: "AccumulationSchedule | Sequence[Sequence[Send]]",
+    topo: OHHCTopology,
+    router: Router,
+) -> tuple[tuple[Send, ...], ...]:
+    """Rewrite ``schedule`` so every send uses only live direct links.
+
+    Healthy sends keep their rounds; a send whose direct link is dead is
+    replaced by its BFS relay chain, each hop appended as its own round
+    right after the original round (store-and-forward order preserved, and
+    later rounds — which depend on the payload's arrival — stay later).
+    Sends *from* a failed leaf node are dropped (data loss, reported by the
+    simulator); a failed internal node raises :class:`GatherImpossible`.
+    """
+    rounds = (
+        schedule.rounds
+        if isinstance(schedule, AccumulationSchedule)
+        else schedule
+    )
+    failed = set(router.failed_nodes)
+    if failed:
+        internal = {
+            topo.global_id(*s.dst) for rnd in rounds for s in rnd
+        } & failed
+        if internal:
+            raise GatherImpossible(
+                f"failed node(s) {sorted(internal)} are accumulation-tree "
+                "destinations; the gather cannot complete as scheduled"
+            )
+
+    out: list[tuple[Send, ...]] = []
+    for rnd in rounds:
+        direct: list[Send] = []
+        relay_chains: list[list[Send]] = []
+        for s in rnd:
+            src = topo.global_id(*s.src)
+            dst = topo.global_id(*s.dst)
+            if src in failed:
+                continue  # dead leaf: its payload is lost, gather degrades
+            if router.link_kind(src, dst) is not None:
+                direct.append(s)
+                continue
+            try:
+                hops = router.shortest_path(src, dst)
+            except RouteError as e:
+                raise GatherImpossible(
+                    f"no reroute for {s.src}→{s.dst} ({s.phase}): {e}"
+                ) from e
+            relay_chains.append(
+                [
+                    Send(topo.addr(u), topo.addr(v), kind, f"{s.phase}+reroute")
+                    for u, v, kind in hops
+                ]
+            )
+        if direct:
+            out.append(tuple(direct))
+        # Interleave relay hops as follow-on rounds: hop k of every chain
+        # shares round slot k (chains are link-disjoint per hop or the
+        # simulator's occupancy serialises them).
+        depth = max((len(c) for c in relay_chains), default=0)
+        for k in range(depth):
+            out.append(tuple(c[k] for c in relay_chains if len(c) > k))
+    return tuple(r for r in out if r)
+
+
+def degraded_gather_rounds(
+    topo: OHHCTopology, scenario: FaultScenario
+) -> tuple[tuple[Send, ...], ...]:
+    """Paper schedule → degraded rounds for ``scenario`` (convenience)."""
+    return rebuild_degraded(
+        AccumulationSchedule.build(topo), topo, scenario.router(topo)
+    )

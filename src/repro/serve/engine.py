@@ -79,6 +79,8 @@ class ServeEngine:
             for i, r in enumerate(requests):
                 if s < r.max_new_tokens:
                     out[r.id].append(int(tok[i, 0]))
-            logits, cache = self._decode(self.params, tok, cache, L + s)
-            tok = jnp.argmax(logits, -1)[:, None]
+            if s + 1 < steps:  # the last emitted token needs no decode step
+                logits, cache = self._decode(self.params, tok, cache, L + s)
+                tok = jnp.argmax(logits, -1)[:, None]
+        assert all(len(out[r.id]) == r.max_new_tokens for r in requests)
         return out
