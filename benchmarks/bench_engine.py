@@ -20,8 +20,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, n_for_mb, sizes_mb
-from repro.core import OHHCTopology, SortEngine, SortPlan, default_capacity
+from benchmarks.common import DEFAULT_DTYPE, emit, n_for_mb, resolve_dtype, sizes_mb
+from repro.core import OHHCTopology, SortEngine, SortPlan, default_capacity, x64_enabled
 from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
 from repro.kernels import ops
 
@@ -29,27 +29,32 @@ FIXED_METHODS = ("paper", "sampled")
 ROUNDS = 3
 
 
-def _fixed_plan(eng: SortEngine, n: int, method: str) -> SortPlan:
+def _fixed_plan(eng: SortEngine, n: int, method: str, dtype) -> SortPlan:
     """What callers did before the engine: fixed method, heuristic capacity."""
-    if n >= eng.host_threshold:
+    if n >= eng.host_threshold or (np.dtype(dtype).itemsize == 8 and not x64_enabled()):
+        # 64-bit keys have no exact jit path without x64 — the fixed
+        # baseline must take the same host detour the engine does.
         return SortPlan("host", method, None, None, "fixed baseline")
     padded = ops.bucketed_length(n)
     cap = default_capacity(padded, eng.topo.total_procs)
     return SortPlan("sim", method, cap, padded, "fixed baseline")
 
 
-def run(paper: bool = False) -> dict:
+def run(paper: bool = False, dtype: str = DEFAULT_DTYPE) -> dict:
     topo = OHHCTopology(1, "full")
     eng = SortEngine(topo)
+    dt = resolve_dtype(dtype)
+    # int32 keeps the historical CSV row names; other dtypes tag the rows.
+    tag = "" if dtype == DEFAULT_DTYPE else f"/{dtype}"
     out = {}
     for dist in ALL_DISTRIBUTIONS:
         for mb in sizes_mb(paper):
             n = n_for_mb(mb)
-            x = make_array(dist, n, seed=mb)
+            x = make_array(dist, n, seed=mb, dtype=dt)
             expect = np.sort(x)
 
             configs = {"auto": None}
-            configs.update({m: _fixed_plan(eng, n, m) for m in FIXED_METHODS})
+            configs.update({m: _fixed_plan(eng, n, m, dt) for m in FIXED_METHODS})
             # warm every executable + check correctness once per config
             retries = {}
             for name, fp in configs.items():
@@ -69,7 +74,7 @@ def run(paper: bool = False) -> dict:
 
             for m in FIXED_METHODS:
                 emit(
-                    f"engine/fixed-{m}/{dist}/{mb}MB",
+                    f"engine/fixed-{m}/{dist}/{mb}MB{tag}",
                     times[m] * 1e6,
                     f"path={configs[m].path};retries={retries[m]}",
                 )
@@ -77,7 +82,7 @@ def run(paper: bool = False) -> dict:
             ratio = times["auto"] / best if best > 0 else 1.0
             out[(dist, mb)] = {**times, "ratio": ratio}
             emit(
-                f"engine/auto/{dist}/{mb}MB",
+                f"engine/auto/{dist}/{mb}MB{tag}",
                 times["auto"] * 1e6,
                 f"path={plan.path};method={plan.method};"
                 f"ratio_vs_best_fixed={ratio:.2f}",

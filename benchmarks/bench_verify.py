@@ -1,0 +1,47 @@
+"""Conformance grid as a benchmark suite (DESIGN.md §7).
+
+Runs the verify grid — the tier-1 slice by default, the full smoke grid
+under ``--paper`` — and emits per-(path, method) timing plus the pass
+count, so a perf regression in any executor shows up in the same CSV
+stream as the paper-figure benchmarks.  ``--dtype`` narrows the sweep to
+one key type (the paper's "different integer array types" axis).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.verify import differential, grid
+
+
+def run(paper: bool = False, dtype: str | None = None) -> dict:
+    """``dtype=None`` sweeps every key type; an explicit dtype (run.py's
+    ``--dtype``) narrows the grid to that one so rows stay comparable."""
+    scenarios = grid.smoke_grid(devices=1) if paper else grid.tier1_grid()
+    if dtype is not None:
+        scenarios = [sc for sc in scenarios if sc.dtype == dtype]
+    # Warm-up pass on shared engines, then time: the first execution of
+    # each (shape bucket, capacity, method, dtype) pays jit compilation,
+    # which would otherwise dominate the mean and hide real sort slowdowns.
+    engines = differential.EngineCache(devices=1)
+    differential.run_grid(scenarios, keep_outputs=False, engines=engines)
+    results = differential.run_grid(scenarios, keep_outputs=False, engines=engines)
+    groups: dict[tuple[str, str], list] = {}
+    for r in results:
+        groups.setdefault((r.path, r.method), []).append(r)
+    out = {}
+    for (path, method), rs in sorted(groups.items()):
+        fails = sum(1 for r in rs if r.status != "pass")
+        mean_us = float(np.mean([r.elapsed_s for r in rs])) * 1e6
+        out[(path, method)] = {"scenarios": len(rs), "fails": fails}
+        emit(
+            f"verify/{path}/{method}",
+            mean_us,
+            f"scenarios={len(rs)};fails={fails}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

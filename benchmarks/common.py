@@ -18,6 +18,17 @@ SMALL_SIZES_MB = (1, 2, 4)
 PAPER_SIZES_MB = (10, 20, 30, 40, 50, 60)
 DIMS = (1, 2, 3, 4)
 
+# The paper's "different integer array types" axis (+ float32, §2's native
+# key type).  ``--dtype`` on run.py selects one; int32 is the paper default.
+DTYPES = ("int8", "int16", "int32", "int64", "uint32", "float32")
+DEFAULT_DTYPE = "int32"
+
+
+def resolve_dtype(name: str) -> np.dtype:
+    if name not in DTYPES:
+        raise ValueError(f"unknown dtype {name!r}; choose from {DTYPES}")
+    return np.dtype(name)
+
 
 def sizes_mb(paper: bool):
     return PAPER_SIZES_MB if paper else SMALL_SIZES_MB

@@ -1,10 +1,12 @@
 """Benchmark harness — one module per paper table/figure family.
 
-``PYTHONPATH=src python -m benchmarks.run [--paper] [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--paper] [--only NAME] [--dtype D]``
 
 Prints ``name,us_per_call,derived`` CSV.  ``--paper`` uses the paper's
 exact 10–60 MB sizes (slow on this 1-core container); the default grid is
-1–4 MB with identical structure.
+1–4 MB with identical structure.  ``--dtype`` selects the key type for the
+suites that sweep the paper's "different integer array types" axis
+(``engine``, ``verify``); the rest pin the paper's int32.
 """
 
 from __future__ import annotations
@@ -22,21 +24,24 @@ from benchmarks import (
     bench_parallel,
     bench_sequential,
     bench_speedup,
+    bench_verify,
 )
+from benchmarks.common import DEFAULT_DTYPE, DTYPES
 
 SUITES = {
-    "sequential": lambda paper: bench_sequential.run(paper),  # Fig 6.1
-    "parallel": lambda paper: bench_parallel.run(paper),  # Figs 6.2/6.3
-    "speedup_full": lambda paper: bench_speedup.run(paper, "full"),  # 6.4–6.7
-    "speedup_half": lambda paper: bench_speedup.run(paper, "half"),  # 6.8–6.11
-    "efficiency_full": lambda paper: bench_efficiency.run(paper, "full"),  # 6.12–15
-    "efficiency_half": lambda paper: bench_efficiency.run(paper, "half"),  # 6.16–19
-    "counters": lambda paper: bench_counters.run(paper),  # 6.20–6.24
-    "commsteps": lambda paper: bench_commsteps.run(paper),  # Theorem 3
-    "kernels": lambda paper: bench_kernels.run(paper),
-    "moe_dispatch": lambda paper: bench_moe_dispatch.run(paper),
-    "engine": lambda paper: bench_engine.run(paper),  # autotuned dispatch
-    "netsim": lambda paper: bench_netsim.run(paper),  # link-level simulation
+    "sequential": lambda paper, dtype: bench_sequential.run(paper),  # Fig 6.1
+    "parallel": lambda paper, dtype: bench_parallel.run(paper),  # Figs 6.2/6.3
+    "speedup_full": lambda paper, dtype: bench_speedup.run(paper, "full"),  # 6.4–6.7
+    "speedup_half": lambda paper, dtype: bench_speedup.run(paper, "half"),  # 6.8–6.11
+    "efficiency_full": lambda paper, dtype: bench_efficiency.run(paper, "full"),  # 6.12–15
+    "efficiency_half": lambda paper, dtype: bench_efficiency.run(paper, "half"),  # 6.16–19
+    "counters": lambda paper, dtype: bench_counters.run(paper),  # 6.20–6.24
+    "commsteps": lambda paper, dtype: bench_commsteps.run(paper),  # Theorem 3
+    "kernels": lambda paper, dtype: bench_kernels.run(paper),
+    "moe_dispatch": lambda paper, dtype: bench_moe_dispatch.run(paper),
+    "engine": lambda paper, dtype: bench_engine.run(paper, dtype=dtype or DEFAULT_DTYPE),  # autotuned dispatch
+    "netsim": lambda paper, dtype: bench_netsim.run(paper),  # link-level simulation
+    "verify": lambda paper, dtype: bench_verify.run(paper, dtype=dtype),  # conformance grid (None = all dtypes)
 }
 
 
@@ -44,12 +49,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true", help="paper-exact 10-60MB sizes")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument(
+        "--dtype", default=None, choices=list(DTYPES),
+        help="key dtype for the dtype-swept suites (engine defaults to "
+        f"{DEFAULT_DTYPE}; verify sweeps all dtypes unless narrowed)",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
-        fn(args.paper)
+        fn(args.paper, args.dtype)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from repro.core.engine import (
     autotune_capacity,
     choose_plan,
     estimate_stats,
+    x64_enabled,
 )
 
 __all__ = [
@@ -45,6 +46,7 @@ __all__ = [
     "autotune_capacity",
     "choose_plan",
     "estimate_stats",
+    "x64_enabled",
     "OHHCTopology",
     "table_1_1",
     "HHC_SIZE",

@@ -47,8 +47,9 @@ from repro import compat
 from repro.core import partition
 
 
-def _fill_value(dtype):
-    return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else jnp.inf
+# Typed scalar (a bare Python int would be weak-typed int32 and overflow
+# for uint32 where it feeds jnp.where directly).
+_fill_value = partition.max_sentinel
 
 
 def _local_splitters(local: jax.Array, num_shards: int, axis_names, oversample: int):

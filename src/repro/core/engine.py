@@ -61,6 +61,17 @@ from repro.kernels import ops
 _MAX_STAT_BUCKETS = 256
 
 
+def x64_enabled() -> bool:
+    """True when jax will preserve 64-bit dtypes end to end.
+
+    With x64 off (the default), ``jnp.asarray`` silently downcasts
+    int64/uint64/float64 keys to their 32-bit twins — so every jit path
+    would sort *different values* than the caller handed in.  Dispatch
+    (``choose_plan``) and the verify grid's pruning rules both consult this.
+    """
+    return bool(jax.config.jax_enable_x64)
+
+
 # --------------------------------------------------------------------------
 # Input statistics
 # --------------------------------------------------------------------------
@@ -211,6 +222,14 @@ def choose_plan(
 ) -> SortPlan:
     """Stats × topology → (path, method, capacity).  Pure and unit-testable."""
     P = topo.total_procs
+    if np.dtype(stats.dtype).itemsize == 8 and not x64_enabled():
+        # jnp.asarray would silently downcast 64-bit keys to 32 bits on the
+        # sim and dist paths — the numpy host path is the only executor
+        # that sorts the caller's actual values.
+        return SortPlan(
+            "host", "paper", None, None,
+            f"{stats.dtype} keys without jax x64: host is the only exact path",
+        )
     if mesh_devices > 1:
         if len(mesh_axes) >= 2:
             return SortPlan(
@@ -262,12 +281,10 @@ def choose_plan(
 # --------------------------------------------------------------------------
 # jit-able padded simulated sort (the engine's compiled unit)
 # --------------------------------------------------------------------------
-def _sim_fill(dtype):
-    return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else jnp.inf
-
-
-def _sim_low(dtype):
-    return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf
+# Typed sentinels shared with dist_sort (see partition.max_sentinel for
+# why these must carry an explicit dtype).
+_sim_fill = partition.max_sentinel
+_sim_low = partition.min_sentinel
 
 
 def _sim_sort_padded(
@@ -294,14 +311,28 @@ def _sim_sort_padded(
     pos = jnp.arange(n_pad)
     valid = pos < n_valid
     if method == "paper":
-        ftype = jnp.float32
-        lo = jnp.min(jnp.where(valid, x_pad, fill)).astype(ftype)
-        hi = jnp.max(jnp.where(valid, x_pad, _sim_low(dtype))).astype(ftype)
-        width = (hi - lo) / P
-        width = jnp.where(width > 0, width, 1.0)
-        ids = jnp.clip(
-            jnp.floor((x_pad.astype(ftype) - lo) / width), 0, P - 1
-        ).astype(jnp.int32)
+        lo = jnp.min(jnp.where(valid, x_pad, fill))
+        hi = jnp.max(jnp.where(valid, x_pad, _sim_low(dtype)))
+        if jnp.issubdtype(dtype, jnp.integer):
+            # Exact integer bucket ids.  float32 maths collapses keys above
+            # 2^24 onto shared bucket edges (the int64/uint32 adversarial
+            # case), skewing counts away from the measured capacity model.
+            # Unsigned subtraction is exact for any signed span via
+            # two's-complement wraparound; width = span//P + 1 keeps every
+            # id strictly below P.
+            u = jnp.uint64 if jnp.dtype(dtype).itemsize == 8 else jnp.uint32
+            lo_u = lo.astype(u)
+            width = (hi.astype(u) - lo_u) // P + 1
+            ids = ((x_pad.astype(u) - lo_u) // width).astype(jnp.int32)
+            ids = jnp.clip(ids, 0, P - 1)  # pad tail may wrap below lo
+        else:
+            ftype = jnp.float64 if dtype == jnp.float64 else jnp.float32
+            lo_f = lo.astype(ftype)
+            width = (hi.astype(ftype) - lo_f) / P
+            width = jnp.where(width > 0, width, 1.0)
+            ids = jnp.clip(
+                jnp.floor((x_pad.astype(ftype) - lo_f) / width), 0, P - 1
+            ).astype(jnp.int32)
     elif method == "sampled":
         s = int(min(n_pad, sample_size))
         # Strided gather over the *valid* region only (dynamic indices are
@@ -463,6 +494,7 @@ class SortEngine:
             self.last_report = {
                 "plan": plan, "n": n, "stats": stats, "overflow_retries": 0,
                 "counts_sum": int(r.bucket_sizes.sum()),
+                "counts": np.asarray(r.bucket_sizes),
             }
             return r.sorted_array
         if plan.path == "dist":
@@ -493,6 +525,7 @@ class SortEngine:
         self.last_report = {
             "plan": plan, "n": n, "stats": stats, "capacity_used": capacity,
             "counts_sum": got, "overflow_retries": retries,
+            "counts": np.asarray(counts),
         }
         return np.asarray(out)[:n]
 
@@ -624,7 +657,10 @@ class SortEngine:
         )
         self.last_report = {
             "plan": plan, "n": n, "stats": stats,
-            "counts_sum": int(counts.sum()), "overflow_retries": retries,
+            # counts includes the shard-divisibility pad (max-sentinel
+            # elements that sort to the tail and are sliced off below);
+            # report caller elements so conservation means counts_sum == n.
+            "counts_sum": int(counts.sum()) - pad, "overflow_retries": retries,
             "comm_sim_s": (
                 plan.comm_sim_s
                 if plan.comm_sim_s is not None

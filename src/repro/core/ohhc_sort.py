@@ -145,7 +145,12 @@ def ohhc_sort_host(
         if width <= 0:
             ids = np.zeros(x.shape, np.int64)
         else:
-            ids = np.clip(((x - lo) / width).astype(np.int64), 0, P - 1)
+            # float64 difference: narrow signed dtypes (int8 spanning the
+            # negative range) would wrap under native-dtype subtraction.
+            ids = np.clip(
+                ((x.astype(np.float64) - float(lo)) / width).astype(np.int64),
+                0, P - 1,
+            )
     elif method == "sampled":
         s = min(x.size, 32 * P)
         sample = np.sort(x[:: -(-x.size // s)])
@@ -258,7 +263,10 @@ def parallel_quicksort_counters(
         ids = (
             np.zeros(x.shape, np.int64)
             if width <= 0
-            else np.clip(((x - lo) / width).astype(np.int64), 0, P - 1)
+            else np.clip(
+                ((x.astype(np.float64) - float(lo)) / width).astype(np.int64),
+                0, P - 1,
+            )
         )
     else:
         s = min(x.size, 32 * P)

@@ -24,6 +24,25 @@ import jax
 import jax.numpy as jnp
 
 
+def max_sentinel(dtype):
+    """Typed dtype-max scalar (pad fill that sorts to the end).
+
+    Must carry ``dtype`` explicitly: a bare Python int (uint32's
+    4294967295) is weak-typed int32 by jax and overflows at trace time
+    wherever it reaches ``jnp.where``/arguments directly.
+    """
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+    return jnp.asarray(jnp.inf, dtype)
+
+
+def min_sentinel(dtype):
+    """Typed dtype-min scalar (masked out of max computations)."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+    return jnp.asarray(-jnp.inf, dtype)
+
+
 def default_capacity(n: int, num_buckets: int) -> int:
     """The legacy fixed bucket capacity: ``2·ceil(n/P)`` rounded up to 8.
 

@@ -1,0 +1,64 @@
+"""repro.verify — paper-grid differential conformance & regression subsystem.
+
+The paper's evaluation is an experiment grid — "different OHHC dimensions,
+different integer array types and different array sizes" — and this package
+turns that grid into an executable, CI-enforced contract (DESIGN.md §7):
+
+* :mod:`repro.verify.grid`          — parameterized scenario axes + pruning
+* :mod:`repro.verify.differential`  — every scenario vs the ``np.sort``
+  oracle, plus cross-path agreement checks
+* :mod:`repro.verify.properties`    — metamorphic checks and fault-scenario
+  stress via ``repro.net.faults`` degraded schedules
+* :mod:`repro.verify.baseline`      — per-scenario JSON baselines with
+  drift detection (a plan-policy change must be an explicit baseline
+  update, never a silent flip)
+
+CLI entry point: ``python tools/verify.py --smoke`` (see tools/verify.py).
+"""
+
+from repro.verify.grid import (
+    DIMS,
+    DTYPES,
+    SIZE_BUCKETS,
+    Scenario,
+    full_grid,
+    prune_reason,
+    smoke_grid,
+    tier1_grid,
+)
+from repro.verify.differential import ScenarioResult, cross_check, run_grid, run_scenario
+from repro.verify.properties import (
+    fault_replay,
+    metamorphic_checks,
+    pairs_pairing_check,
+)
+from repro.verify.baseline import (
+    DriftReport,
+    build_baseline,
+    diff_baselines,
+    load_baseline,
+    save_baseline,
+)
+
+__all__ = [
+    "DIMS",
+    "DTYPES",
+    "SIZE_BUCKETS",
+    "Scenario",
+    "full_grid",
+    "prune_reason",
+    "smoke_grid",
+    "tier1_grid",
+    "ScenarioResult",
+    "cross_check",
+    "run_grid",
+    "run_scenario",
+    "fault_replay",
+    "metamorphic_checks",
+    "pairs_pairing_check",
+    "DriftReport",
+    "build_baseline",
+    "diff_baselines",
+    "load_baseline",
+    "save_baseline",
+]

@@ -1,0 +1,198 @@
+"""Differential execution: every grid scenario vs the ``np.sort`` oracle
+(DESIGN.md §7).
+
+Each :class:`~repro.verify.grid.Scenario` is forced down its declared
+(path, method) via an explicit :class:`~repro.core.engine.SortPlan` — the
+same calling convention ``benchmarks/bench_engine.py`` uses for its fixed
+baselines — so the grid exercises the executors directly rather than
+whatever ``choose_plan`` would have picked.  Engines are cached per
+(topology, mesh-shape) so the warm jit cache works *for* the sweep: two
+scenarios in the same shape bucket share one executable.
+
+Checks per scenario:
+
+* **oracle**     — output equals ``np.sort(input)`` exactly, dtype preserved;
+* **conservation** — the executor's element accounting (``counts_sum``)
+  matches ``n`` (no silent capacity drops);
+* **cross-path** — :func:`cross_check` then asserts byte-equality between
+  every pair of paths/methods that sorted the same input array, which
+  catches oracle *and* comparison bugs that a single-path check can hide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import OHHCTopology, SortEngine, SortPlan, autotune_capacity
+from repro.verify.grid import Scenario
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Outcome of one scenario run.  ``output`` is held only for the
+    in-memory cross-check; baselines persist the stable fields."""
+
+    scenario: Scenario
+    status: str  # 'pass' | 'fail'
+    detail: str
+    path: str
+    method: str
+    capacity: int | None
+    retries: int
+    counts_sum: int | None
+    elapsed_s: float
+    output: np.ndarray | None = None
+
+    @property
+    def scenario_id(self) -> str:
+        return self.scenario.scenario_id
+
+
+class EngineCache:
+    """One SortEngine per (d_h, variant, needs-mesh) — shared jit caches."""
+
+    def __init__(self, *, devices: int = 1):
+        self.devices = int(devices)
+        self._engines: dict[tuple, SortEngine] = {}
+        self._meshes: dict[int, object] = {}
+
+    def mesh(self, axes: int):
+        import jax
+        from jax.sharding import Mesh
+
+        if axes not in self._meshes:
+            devs = np.array(jax.devices()[: self.devices])
+            if axes >= 2:
+                self._meshes[axes] = Mesh(
+                    devs.reshape(2, -1), ("pod", "data")
+                )
+            else:
+                self._meshes[axes] = Mesh(devs, ("data",))
+        return self._meshes[axes]
+
+    def engine_for(self, sc: Scenario) -> SortEngine:
+        mesh_axes = 2 if (sc.path == "dist" and sc.method == "hier") else 1
+        key = (sc.d_h, sc.variant, sc.path == "dist", mesh_axes)
+        eng = self._engines.get(key)
+        if eng is None:
+            topo = OHHCTopology(sc.d_h, sc.variant)
+            if sc.path == "dist":
+                mesh = self.mesh(mesh_axes)
+                names = mesh.axis_names
+                eng = SortEngine(topo, mesh=mesh, axis_names=names)
+            else:
+                eng = SortEngine(topo)
+            self._engines[key] = eng
+        return eng
+
+
+def forced_plan(eng: SortEngine, sc: Scenario, x: np.ndarray) -> SortPlan:
+    """Pin the scenario's (path, method); capacity still comes from the
+    engine's measured autotune so the grid validates the capacity model too."""
+    if sc.path == "host":
+        return SortPlan("host", sc.method, None, None, "verify grid")
+    if sc.path == "dist":
+        return SortPlan("dist", sc.method, None, None, "verify grid")
+    from repro.kernels import ops
+
+    stats = eng.stats(x)
+    padded = ops.bucketed_length(x.size)
+    cap = autotune_capacity(stats, sc.method, eng.topo.total_procs, padded)
+    return SortPlan("sim", sc.method, cap, padded, "verify grid")
+
+
+def run_scenario(
+    sc: Scenario, engines: EngineCache, *, keep_output: bool = True
+) -> ScenarioResult:
+    """Execute one scenario against the oracle."""
+    x = sc.make_input()
+    oracle = np.sort(x)
+    eng = engines.engine_for(sc)
+    t0 = time.perf_counter()
+    try:
+        plan = forced_plan(eng, sc, x)
+        out = eng.sort(x, plan=plan)
+    except Exception as e:  # an executor crash is a finding, not an abort
+        return ScenarioResult(
+            sc, "fail", f"error: {type(e).__name__}: {e}", sc.path, sc.method,
+            None, 0, None, time.perf_counter() - t0,
+        )
+    elapsed = time.perf_counter() - t0
+    report = eng.last_report or {}
+    capacity = report.get("capacity_used", plan.capacity)
+    retries = int(report.get("overflow_retries", 0))
+    counts_sum = report.get("counts_sum")
+    counts_sum = int(counts_sum) if counts_sum is not None else None
+
+    out = np.asarray(out)
+    if out.dtype != x.dtype:
+        status, detail = "fail", f"dtype changed: {x.dtype} -> {out.dtype}"
+    elif out.shape != oracle.shape:
+        status, detail = "fail", f"shape changed: {oracle.shape} -> {out.shape}"
+    elif not np.array_equal(out, oracle):
+        bad = int(np.flatnonzero(out != oracle)[0])
+        status = "fail"
+        detail = (
+            f"oracle mismatch at index {bad}: got {out[bad]!r}, "
+            f"want {oracle[bad]!r}"
+        )
+    elif counts_sum is not None and counts_sum != x.size:
+        status, detail = "fail", f"element accounting: counts_sum={counts_sum} != n={x.size}"
+    else:
+        status, detail = "pass", ""
+    return ScenarioResult(
+        sc, status, detail, sc.path, sc.method, capacity, retries,
+        counts_sum, elapsed, out if keep_output else None,
+    )
+
+
+def run_grid(
+    scenarios: Sequence[Scenario],
+    *,
+    devices: int = 1,
+    keep_outputs: bool = True,
+    progress: "Callable[[ScenarioResult], None] | None" = None,
+    engines: "EngineCache | None" = None,
+) -> list[ScenarioResult]:
+    """Run every scenario (pre-pruned ones are the caller's business —
+    anything handed in is executed) and return results in grid order.
+
+    Pass ``engines`` to reuse warm jit caches across sweeps (e.g. a
+    warm-up pass before a timed pass — ``benchmarks/bench_verify.py``).
+    """
+    if engines is None:
+        engines = EngineCache(devices=devices)
+    results = []
+    for sc in scenarios:
+        r = run_scenario(sc, engines, keep_output=keep_outputs)
+        results.append(r)
+        if progress is not None:
+            progress(r)
+    return results
+
+
+def cross_check(results: Sequence[ScenarioResult]) -> list[str]:
+    """Pairwise differential check: all paths/methods that sorted the same
+    input must produce byte-identical output, *including* scenarios that
+    failed the oracle (so a divergence is reported both as the failing
+    cell and as a localized path-vs-path disagreement).  Returns mismatch
+    messages."""
+    groups: dict[str, list[ScenarioResult]] = {}
+    for r in results:
+        if r.output is not None:
+            groups.setdefault(r.scenario.group_id, []).append(r)
+    mismatches = []
+    for gid, members in groups.items():
+        ref = members[0]
+        for other in members[1:]:
+            if not np.array_equal(ref.output, other.output):
+                mismatches.append(
+                    f"{gid}: {ref.scenario_id} and {other.scenario_id} disagree"
+                )
+    return mismatches
+
+

@@ -1,0 +1,232 @@
+"""Paper-grid scenario axes and pruning rules (DESIGN.md §7).
+
+One :class:`Scenario` is one cell of the paper's experiment grid, extended
+along every axis the repo actually implements:
+
+* ``dtype``   — the paper's "different integer array types"
+  (int8/int16/int32/int64/uint32) plus float32;
+* ``dist``    — the paper's §5 input classes (``ALL_DISTRIBUTIONS``:
+  random/sorted/reversed/local + the beyond-paper duplicate-heavy class);
+* ``n``       — size buckets chosen to hit distinct pow2 jit shape buckets
+  (including a non-power-of-two and a sub-``P`` size);
+* ``d_h``/``variant`` — OHHC dimension and group variant (Table 1.1);
+* ``path``/``method`` — the execution path (``sim``/``host``/``dist``) and
+  its splitter method.
+
+Invalid combinations are *pruned, not skipped silently*:
+:func:`prune_reason` returns a human-readable reason string, and the CLI
+report carries every pruned cell so the grid's coverage is auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.data.distributions import ALL_DISTRIBUTIONS
+
+# The paper's "different integer array types", plus float32 (§2's TPU-native
+# key type).  uint64/float64 are excluded: without jax x64 they have no
+# exact jit path at all, and the host path already covers 64-bit via int64.
+DTYPES = ("int8", "int16", "int32", "int64", "uint32", "float32")
+
+# Distinct pow2 shape buckets: 64 (sub-P for d_h≥2 — more buckets than
+# elements), 257 (odd, pads to 512), 1024 (exact pow2), 3072 (pads to 4096).
+SIZE_BUCKETS = (64, 257, 1024, 3072)
+
+DIMS = (1, 2, 3)
+
+PATHS = ("sim", "host", "dist")
+SIM_METHODS = ("paper", "sampled")
+HOST_METHODS = ("paper", "sampled")
+DIST_METHODS = ("paper", "sample", "hier", "valiant")
+
+
+def methods_for(path: str) -> tuple[str, ...]:
+    return {"sim": SIM_METHODS, "host": HOST_METHODS, "dist": DIST_METHODS}[path]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One executable cell of the conformance grid."""
+
+    path: str
+    method: str
+    dtype: str
+    dist: str
+    n: int
+    d_h: int
+    variant: str = "full"
+    seed: int = 7
+
+    @property
+    def scenario_id(self) -> str:
+        """Stable key used by baselines; every axis value is spelled out."""
+        var = "" if self.variant == "full" else f"-{self.variant}"
+        return (
+            f"{self.path}/{self.method}/{self.dtype}/{self.dist}"
+            f"/n{self.n}/d{self.d_h}{var}"
+        )
+
+    @property
+    def group_id(self) -> str:
+        """Input-identity key: scenarios sharing it sort the *same array*
+        and must agree output-for-output (the differential cross-check)."""
+        var = "" if self.variant == "full" else f"-{self.variant}"
+        return f"{self.dtype}/{self.dist}/n{self.n}/d{self.d_h}{var}/s{self.seed}"
+
+    def make_input(self) -> np.ndarray:
+        from repro.data.distributions import make_array
+
+        return make_array(self.dist, self.n, seed=self.seed, dtype=np.dtype(self.dtype))
+
+
+def prune_reason(
+    sc: Scenario, *, devices: int = 1, mesh_axes: int = 1, x64: "bool | None" = None
+) -> str | None:
+    """Why ``sc`` cannot run in this environment (None = runnable).
+
+    ``devices``/``mesh_axes`` describe the available jax mesh; pruning is a
+    property of (scenario, environment), never silent.  ``x64`` pins the
+    64-bit-key rule: ``None`` autodetects the ambient jax config; the
+    baseline-facing grids pass ``False`` so the committed smoke baseline's
+    cell set never depends on ``JAX_ENABLE_X64`` (running with x64 on then
+    merely *skips* those cells — it can never execute a downcasting one).
+    """
+    if x64 is None:
+        from repro.core.engine import x64_enabled
+
+        x64 = x64_enabled()
+    if sc.path not in PATHS:
+        return f"unknown path {sc.path!r}"
+    if sc.method not in methods_for(sc.path):
+        return f"method {sc.method!r} invalid for path {sc.path!r}"
+    if np.dtype(sc.dtype).itemsize == 8 and sc.path != "host" and not x64:
+        return "64-bit keys downcast on jit paths without jax x64; host covers this cell"
+    if sc.path == "dist":
+        if devices < 2:
+            return "dist path needs a >1-device mesh"
+        if sc.method == "hier" and mesh_axes < 2:
+            return "hier method needs a 2-axis (pod, data) mesh"
+        if sc.n < devices:
+            return "dist path needs at least one element per shard"
+    return None
+
+
+def _grid(
+    paths: Sequence[str],
+    dtypes: Sequence[str],
+    dists: Sequence[str],
+    sizes: Sequence[int],
+    dims: Sequence[int],
+    variants: Sequence[str] = ("full",),
+) -> Iterator[Scenario]:
+    for path, d_h, variant, dtype, dist, n in itertools.product(
+        paths, dims, variants, dtypes, dists, sizes
+    ):
+        for method in methods_for(path):
+            yield Scenario(path, method, dtype, dist, n, d_h, variant)
+
+
+def full_grid(*, devices: int = 1, mesh_axes: int = 1) -> list[Scenario]:
+    """Every runnable scenario of the full paper grid (pruned cells removed;
+    use :func:`pruned_cells` for the audit list)."""
+    scenarios = list(
+        _grid(PATHS, DTYPES, ALL_DISTRIBUTIONS, SIZE_BUCKETS, DIMS)
+    )
+    # The half-group variant (Table 1.1's G = P/2 column) at d_h=1: the
+    # other topology family, exercised on the single-box paths.
+    scenarios += list(
+        _grid(("sim", "host"), DTYPES, ALL_DISTRIBUTIONS, (1024,), (1,), ("half",))
+    )
+    return [
+        sc
+        for sc in scenarios
+        if prune_reason(sc, devices=devices, mesh_axes=mesh_axes) is None
+    ]
+
+
+def smoke_grid(*, devices: int = 1, mesh_axes: int = 1) -> list[Scenario]:
+    """The pruned CI grid: every axis value covered, ≥100 scenarios, small
+    sizes only so the whole sweep stays in CI's fast lane.
+
+    Structure: the complete dtype × dist × method plane for sim+host at
+    d_h=1 over two sizes, plus dimension rows (d_h ∈ {2,3}), a half-variant
+    row, and — when a mesh exists — a dist row per method.
+    """
+    scenarios: list[Scenario] = []
+    # The dense plane: both single-box paths, all dtypes, all input classes.
+    scenarios += _grid(("sim", "host"), DTYPES, ALL_DISTRIBUTIONS, (257, 1024), (1,))
+    # Dimension axis: higher d_h on the jit path (P = 144 / 576), including
+    # the n < P cell where most buckets stay empty.
+    scenarios += _grid(("sim",), ("int32",), ("random", "dupes"), (64, 1024), (2, 3))
+    # Variant axis: the half-group topology.
+    scenarios += _grid(
+        ("sim", "host"), ("int32", "uint32"), ("random", "local"), (1024,), (1,), ("half",)
+    )
+    # Mesh axis (only when the environment has one — e.g. tools/verify.py
+    # --devices N): every dist method on the main dtypes.
+    scenarios += _grid(
+        ("dist",), ("int32", "uint32", "float32"), ("random", "dupes", "sorted"),
+        (1024, 3072), (1,),
+    )
+    # x64=False pins the cell set: the committed smoke baseline must not
+    # grow int64 jit cells when someone runs with JAX_ENABLE_X64=1.
+    return [
+        sc
+        for sc in scenarios
+        if prune_reason(sc, devices=devices, mesh_axes=mesh_axes, x64=False) is None
+    ]
+
+
+def tier1_grid() -> list[Scenario]:
+    """The fast pytest subset — a strict subset of :func:`smoke_grid` (so
+    the committed smoke baseline covers it) touching every dtype, every
+    distribution, both single-box paths, and one higher-dimension cell."""
+    smoke = {sc.scenario_id: sc for sc in smoke_grid(devices=1)}
+    picked: list[Scenario] = []
+    for dtype, dist in zip(
+        ("int8", "int16", "int32", "int64", "uint32", "float32", "int32", "int32"),
+        ("random", "dupes", "local", "sorted", "reversed", "random", "dupes", "sorted"),
+    ):
+        for path in ("sim", "host"):
+            sc = Scenario(path, "paper", dtype, dist, 257, 1)
+            if sc.scenario_id in smoke:
+                picked.append(smoke[sc.scenario_id])
+    # sampled-method and dimension coverage
+    for sc in (
+        Scenario("sim", "sampled", "uint32", "local", 257, 1),
+        Scenario("sim", "sampled", "int8", "random", 257, 1),
+        Scenario("host", "sampled", "int64", "random", 257, 1),
+        Scenario("sim", "paper", "int32", "random", 64, 2),
+    ):
+        if sc.scenario_id in smoke:
+            picked.append(smoke[sc.scenario_id])
+    # dedupe, preserve order
+    seen: set[str] = set()
+    out = []
+    for sc in picked:
+        if sc.scenario_id not in seen:
+            seen.add(sc.scenario_id)
+            out.append(sc)
+    return out
+
+
+def pruned_cells(
+    scenarios: "Sequence[Scenario] | None" = None,
+    *,
+    devices: int = 1,
+    mesh_axes: int = 1,
+) -> list[tuple[Scenario, str]]:
+    """The audit list: every (scenario, reason) the environment prunes."""
+    if scenarios is None:
+        scenarios = list(_grid(PATHS, DTYPES, ALL_DISTRIBUTIONS, SIZE_BUCKETS, DIMS))
+    out = []
+    for sc in scenarios:
+        reason = prune_reason(sc, devices=devices, mesh_axes=mesh_axes)
+        if reason is not None:
+            out.append((sc, reason))
+    return out

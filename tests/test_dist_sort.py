@@ -40,6 +40,13 @@ v, c = dist_sort(jnp.asarray(x), mesh=mesh2, axis_names=("pod", "data"),
                  method="hier", capacity_factor=8.0)
 assert np.array_equal(exact(v, c, 8192), np.sort(x)), "hier"
 
+# uint32 keys at full range: the hier stage-2 fill must stay typed (a bare
+# python-int sentinel weak-types to int32 and overflows at trace time).
+xu = make_array("random", 8192, seed=6, dtype=np.uint32)
+v, c = dist_sort(jnp.asarray(xu), mesh=mesh2, axis_names=("pod", "data"),
+                 method="hier", capacity_factor=8.0)
+assert np.array_equal(exact(v, c, 8192), np.sort(xu)), "hier uint32"
+
 # Valiant two-hop routing: sorted input at capacity_factor=2 — the direct
 # route drops 3/4 of the data (send skew), valiant keeps all of it.
 xs = make_array("sorted", 8192, seed=3)

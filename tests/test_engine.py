@@ -1,6 +1,8 @@
 """SortEngine: dispatch policy, capacity autotune (no overflow), warm
 jit cache (no recompiles within a shape bucket), batched entry points."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -174,6 +176,45 @@ def test_autotuned_capacity_property(n, seed, dist, method):
     out = eng.sort(x, plan=plan)
     np.testing.assert_array_equal(out, np.sort(x))
     assert eng.last_report["counts_sum"] == n
+
+
+# --------------------------------------------- bucket-id precision (int)
+def test_paper_bucket_ids_exact_above_float32_precision():
+    """Regression (ISSUE 3 satellite): float32 bucket-id maths collapses
+    adjacent keys above 2^24 onto shared bucket edges.  With integer
+    arithmetic the sim path's per-bucket counts must match the exact
+    equal-width computation for adversarial large-magnitude uint32 keys."""
+    eng = SortEngine(TOPO)
+    x = np.uint32(1 << 31) + np.arange(36 * 64, dtype=np.uint32)
+    rng = np.random.default_rng(0)
+    rng.shuffle(x)
+    out = eng.sort(x)
+    np.testing.assert_array_equal(out, np.sort(x))
+    assert eng.last_report["plan"].path == "sim"
+    lo, hi = int(x.min()), int(x.max())
+    width = (hi - lo) // 36 + 1
+    expected = np.bincount((x.astype(np.int64) - lo) // width, minlength=36)
+    np.testing.assert_array_equal(eng.last_report["counts"], expected)
+
+
+def test_policy_64bit_keys_without_x64_go_host():
+    """int64/float64 keys would be silently downcast by jnp.asarray on the
+    jit paths; dispatch must route them to the exact numpy host path (and
+    the result must still match the oracle for values beyond 2^32)."""
+    from repro.core import x64_enabled
+
+    if x64_enabled():  # pragma: no cover - container default is x64 off
+        pytest.skip("x64 enabled: every path is exact for 64-bit keys")
+    s = dataclasses.replace(mk_stats(), dtype="int64")
+    assert choose_plan(s, TOPO).path == "host"
+    eng = SortEngine(TOPO)
+    x = (np.int64(1) << 40) + np.random.default_rng(1).integers(
+        0, 1 << 35, 5000, dtype=np.int64
+    )
+    out = eng.sort(x)
+    assert out.dtype == np.int64
+    np.testing.assert_array_equal(out, np.sort(x))
+    assert eng.last_report["plan"].path == "host"
 
 
 # ------------------------------------------------------------- jit cache

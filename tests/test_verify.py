@@ -1,0 +1,186 @@
+"""repro.verify: grid shape/pruning, tier-1 differential slice vs the
+committed smoke baseline, metamorphic properties (permutation for every
+distribution — satellite of ISSUE 3), fault replay, baseline drift."""
+
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import OHHCTopology, SortEngine
+from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
+from repro.verify import (
+    DriftReport,
+    Scenario,
+    build_baseline,
+    cross_check,
+    diff_baselines,
+    fault_replay,
+    load_baseline,
+    metamorphic_checks,
+    pairs_pairing_check,
+    prune_reason,
+    run_grid,
+    save_baseline,
+    smoke_grid,
+    tier1_grid,
+)
+from repro.verify.properties import fault_replay_for_engine_run
+
+pytestmark = pytest.mark.conformance
+
+BASELINE_PATH = pathlib.Path(__file__).parent / "baselines" / "verify_smoke.json"
+
+# One engine per topology for the whole module: the warm jit cache is part
+# of what the conformance battery exercises.
+ENGINE = SortEngine(OHHCTopology(1, "full"))
+
+
+# ------------------------------------------------------------------ grid
+def test_smoke_grid_is_big_unique_and_runnable():
+    smoke = smoke_grid(devices=1)
+    assert len(smoke) >= 100  # the ISSUE's acceptance floor
+    ids = [sc.scenario_id for sc in smoke]
+    assert len(set(ids)) == len(ids)
+    assert all(prune_reason(sc, devices=1) is None for sc in smoke)
+    # every axis value the single-device environment can cover is covered
+    assert {sc.path for sc in smoke} == {"sim", "host"}
+    assert {sc.dist for sc in smoke} == set(ALL_DISTRIBUTIONS)
+    assert {sc.d_h for sc in smoke} == {1, 2, 3}
+    assert "int64" in {sc.dtype for sc in smoke}  # via the host path
+
+
+def test_grid_pruning_rules():
+    # dist needs a mesh
+    sc = Scenario("dist", "sample", "int32", "random", 1024, 1)
+    assert prune_reason(sc, devices=1) is not None
+    assert prune_reason(sc, devices=4) is None
+    # hier needs two mesh axes
+    hier = Scenario("dist", "hier", "int32", "random", 1024, 1)
+    assert prune_reason(hier, devices=4, mesh_axes=1) is not None
+    assert prune_reason(hier, devices=4, mesh_axes=2) is None
+    # 64-bit keys only run where they stay 64-bit
+    i64 = Scenario("sim", "paper", "int64", "random", 1024, 1)
+    assert "64-bit" in prune_reason(i64, devices=1)
+    assert prune_reason(dataclasses.replace(i64, path="host"), devices=1) is None
+    # invalid method/path combos are named, not crashed on
+    assert "invalid" in prune_reason(
+        Scenario("sim", "hier", "int32", "random", 1024, 1)
+    )
+
+
+def test_tier1_is_subset_of_smoke():
+    smoke_ids = {sc.scenario_id for sc in smoke_grid(devices=1)}
+    tier1 = tier1_grid()
+    assert tier1 and all(sc.scenario_id in smoke_ids for sc in tier1)
+
+
+# ---------------------------------------------------- differential slice
+def test_tier1_slice_passes_and_matches_committed_baseline():
+    """The fast conformance gate: every tier-1 cell sorts exactly, paths
+    agree pairwise, and the outcomes match the committed smoke baseline
+    (so a plan/capacity policy change fails here until the baseline is
+    re-recorded — the anti-silent-flip contract)."""
+    results = run_grid(tier1_grid())
+    fails = [(r.scenario_id, r.detail) for r in results if r.status != "pass"]
+    assert not fails, fails
+    assert cross_check(results) == []
+    doc = build_baseline(results, grid="tier1")
+    committed = load_baseline(BASELINE_PATH)
+    drift = diff_baselines(doc, committed, ignore_missing_in_current=True)
+    assert drift.clean, drift.summary()
+
+
+# ------------------------------------------------- metamorphic properties
+@pytest.mark.parametrize("dist", ALL_DISTRIBUTIONS)
+def test_metamorphic_battery_per_distribution(dist):
+    x = make_array(dist, 1500, seed=21)
+    for r in metamorphic_checks(ENGINE, x, subject=dist):
+        assert r.status == "pass", (r.check, r.subject, r.detail)
+
+
+@given(
+    n=st.integers(2, 2500),
+    seed=st.integers(0, 10_000),
+    dist=st.sampled_from(list(ALL_DISTRIBUTIONS)),
+)
+@settings(max_examples=15, deadline=None)
+def test_sort_output_is_permutation_of_input(n, seed, dist):
+    """Satellite: not merely sorted — a permutation (multiset equality)
+    for every distribution, so dropped/duplicated elements can't hide."""
+    x = make_array(dist, n, seed=seed)
+    out = np.asarray(ENGINE.sort(x))
+    assert np.all(out[:-1] <= out[1:])
+    vx, cx = np.unique(x, return_counts=True)
+    vo, co = np.unique(out, return_counts=True)
+    assert np.array_equal(vx, vo) and np.array_equal(cx, co)
+
+
+def test_sort_pairs_pairing_preserved():
+    keys = make_array("dupes", 700, seed=3)
+    vals = np.arange(keys.size, dtype=np.int32)
+    for r in pairs_pairing_check(ENGINE, keys, vals, subject="dupes"):
+        assert r.status == "pass", (r.check, r.detail)
+
+
+# ------------------------------------------------------------ fault stress
+def test_fault_replay_with_engine_bucket_loads():
+    """Degraded gathers deliver every element of a real engine run's
+    bucket distribution, with no simulator-level reroutes left over."""
+    x = make_array("local", 2048, seed=9)
+    for r in fault_replay_for_engine_run(ENGINE, x):
+        assert r.status == "pass", (r.check, r.subject, r.detail)
+
+
+def test_fault_replay_uniform_d2():
+    topo = OHHCTopology(2, "full")
+    for r in fault_replay(topo, [13] * topo.total_procs, groups=(1, 5)):
+        assert r.status == "pass", (r.check, r.subject, r.detail)
+
+
+def test_fault_internal_node_raises_gather_impossible():
+    from repro.net.faults import FaultScenario, GatherImpossible, degraded_gather_rounds
+
+    topo = OHHCTopology(1, "full")
+    with pytest.raises(GatherImpossible):
+        degraded_gather_rounds(
+            topo, FaultScenario(name="master_down", failed_nodes=((0, 0),))
+        )
+
+
+# ------------------------------------------------------ baseline machinery
+def test_baseline_roundtrip_reports_no_drift(tmp_path):
+    results = run_grid(tier1_grid()[:6])
+    doc = build_baseline(results, grid="unit")
+    p = tmp_path / "b.json"
+    save_baseline(doc, p)
+    drift = diff_baselines(build_baseline(results, grid="unit"), load_baseline(p))
+    assert drift.clean and drift.summary() == "no drift"
+
+
+def test_baseline_drift_is_detected():
+    rec = {"status": "pass", "path": "sim", "method": "paper", "capacity": 64, "retries": 0}
+    base = {"schema": 1, "scenarios": {"a": dict(rec), "gone": dict(rec)}}
+    cur = {
+        "schema": 1,
+        "scenarios": {"a": {**rec, "capacity": 128}, "new": dict(rec)},
+    }
+    drift = diff_baselines(cur, base)
+    assert not drift.clean
+    assert drift.added == ("new",)
+    assert drift.removed == ("gone",)
+    assert ("a", "capacity", 64, 128) in drift.changed
+    # subset mode ignores cells the current run didn't execute
+    subset = diff_baselines(
+        {"schema": 1, "scenarios": {"a": dict(rec)}}, base,
+        ignore_missing_in_current=True,
+    )
+    assert subset.clean
+
+
+def test_drift_report_summary_mentions_every_kind():
+    d = DriftReport(("x",), ("y",), (("z", "status", "pass", "fail"),))
+    s = d.summary()
+    assert "ADDED" in s and "REMOVED" in s and "CHANGED" in s

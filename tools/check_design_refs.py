@@ -1,10 +1,10 @@
 #!/usr/bin/env python
 """Docs contract check: every ``DESIGN.md §n`` reference must resolve.
 
-Scans ``src/``, ``tests/``, ``benchmarks/``, and ``examples/`` for
-``DESIGN.md §<n>`` citations and verifies a ``§<n>`` section heading exists
-in ``DESIGN.md``.  Exits non-zero listing any dangling references (CI runs
-this; ``tests/test_docs_refs.py`` runs it under pytest too).
+Scans ``src/``, ``tests/``, ``benchmarks/``, ``examples/``, and ``tools/``
+for ``DESIGN.md §<n>`` citations and verifies a ``§<n>`` section heading
+exists in ``DESIGN.md``.  Exits non-zero listing any dangling references
+(CI runs this; ``tests/test_docs_refs.py`` runs it under pytest too).
 """
 
 from __future__ import annotations
@@ -14,7 +14,7 @@ import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
 HEADING_RE = re.compile(r"^#+\s*§(\d+)\b", re.MULTILINE)
 

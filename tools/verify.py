@@ -1,0 +1,246 @@
+#!/usr/bin/env python
+"""Paper-grid conformance runner (DESIGN.md §7).
+
+Sweeps the verify grid (``repro.verify.grid``), checks every scenario
+against the ``np.sort`` oracle plus cross-path agreement, runs the
+metamorphic/fault property battery on a representative slice, and gates
+the result on the committed baseline (``tests/baselines/verify_smoke.json``)
+— any plan/capacity/status drift fails the run until the baseline is
+explicitly re-recorded.
+
+Usage::
+
+    PYTHONPATH=src python tools/verify.py --smoke              # CI gate
+    PYTHONPATH=src python tools/verify.py --smoke --update-baseline
+    PYTHONPATH=src python tools/verify.py --full --devices 6   # nightly
+    PYTHONPATH=src python tools/verify.py --smoke --filter uint32
+
+``--devices N`` forces N XLA host devices (set *before* jax imports) so
+the ``dist`` scenarios become runnable on a single machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = ROOT / "tests" / "baselines" / "verify_smoke.json"
+
+# Self-contained invocation (`python tools/verify.py ...`): make the
+# in-repo package importable without requiring PYTHONPATH=src.
+if str(ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(ROOT / "src"))
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true", help="pruned CI grid (default)")
+    mode.add_argument("--full", action="store_true", help="the whole paper grid")
+    mode.add_argument("--tier1", action="store_true", help="the fast pytest subset")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="XLA host device count (>1 unlocks dist scenarios)")
+    ap.add_argument("--filter", default=None,
+                    help="substring filter on scenario ids")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default for --smoke: {DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="record outcomes as the new baseline instead of gating")
+    ap.add_argument("--report", default=None,
+                    help="write the full JSON report (CI artifact) here")
+    ap.add_argument("--skip-properties", action="store_true",
+                    help="grid only; skip the metamorphic/fault battery")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    if args.devices > 1:
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    # jax (via repro) must import *after* XLA_FLAGS is set.
+    import numpy as np
+
+    from repro.core import OHHCTopology, SortEngine
+    from repro.data.distributions import make_array
+    from repro.verify import baseline as bl
+    from repro.verify import differential, grid, properties
+
+    mesh_axes = 2 if args.devices >= 4 and args.devices % 2 == 0 else 1
+    if args.full:
+        mode = "full"
+        scenarios = grid.full_grid(devices=args.devices, mesh_axes=mesh_axes)
+    elif args.tier1:
+        mode = "tier1"
+        scenarios = grid.tier1_grid()
+    else:
+        mode = "smoke"
+        scenarios = grid.smoke_grid(devices=args.devices, mesh_axes=mesh_axes)
+    pruned = grid.pruned_cells(devices=args.devices, mesh_axes=mesh_axes)
+    if args.filter:
+        scenarios = [sc for sc in scenarios if args.filter in sc.scenario_id]
+
+    baseline_path = pathlib.Path(
+        args.baseline
+        if args.baseline
+        else (DEFAULT_BASELINE if mode in ("smoke", "tier1") else "")
+        or f"verify_{mode}_baseline.json"
+    )
+    # The committed smoke baseline records the devices=1 grid; gate against
+    # it only when this run executes that same grid (or a filtered/tier1
+    # subset of it) — a multi-device sweep adds dist cells the baseline
+    # legitimately doesn't carry, which is coverage, not drift.
+    subset_run = bool(args.filter) or mode == "tier1"
+    comparable = args.baseline is not None or (
+        mode in ("smoke", "tier1") and args.devices == 1
+    )
+    if args.update_baseline and baseline_path.resolve() == DEFAULT_BASELINE.resolve() and (
+        subset_run or args.devices != 1 or mode != "smoke"
+    ):
+        # Never let a partial or differently-configured run silently shrink
+        # the committed smoke baseline out from under CI; refuse up front.
+        print(
+            "refusing --update-baseline: the committed smoke baseline must "
+            "be recorded by a plain `--smoke` run (no --filter, --devices 1); "
+            "pass --baseline PATH to record elsewhere"
+        )
+        return 2
+
+    t0 = time.perf_counter()
+    done = {"n": 0}
+
+    def progress(r):
+        done["n"] += 1
+        if not args.quiet and (r.status != "pass" or done["n"] % 25 == 0):
+            print(
+                f"[{done['n']:4d}/{len(scenarios)}] {r.status:4s} "
+                f"{r.scenario_id}  {r.detail}",
+                flush=True,
+            )
+
+    results = differential.run_grid(
+        scenarios, devices=args.devices, progress=progress
+    )
+    mismatches = differential.cross_check(results)
+    fails = [r for r in results if r.status != "pass"]
+
+    prop_results = []
+    if not args.skip_properties:
+        topo = OHHCTopology(1, "full")
+        eng = SortEngine(topo)
+        for dist in ("random", "sorted", "dupes", "local"):
+            for dtype in ("int32", "uint32"):
+                x = make_array(dist, 1024, seed=11, dtype=np.dtype(dtype))
+                prop_results += properties.metamorphic_checks(
+                    eng, x, subject=f"{dtype}/{dist}"
+                )
+        keys = make_array("dupes", 500, seed=5)
+        prop_results += properties.pairs_pairing_check(
+            eng, keys, np.arange(keys.size, dtype=np.int32), subject="int32/dupes"
+        )
+        x = make_array("local", 2048, seed=9)
+        prop_results += properties.fault_replay_for_engine_run(eng, x)
+        for d_h in (1, 2):
+            t = OHHCTopology(d_h, "full")
+            prop_results += properties.fault_replay(
+                t, [17] * t.total_procs, groups=(1,)
+            )
+    prop_fails = [p for p in prop_results if p.status != "pass"]
+
+    doc = bl.build_baseline(results, grid=mode)
+    drift = None
+    baseline_missing = False
+    if args.update_baseline:
+        bl.save_baseline(doc, baseline_path)
+        print(f"baseline recorded: {baseline_path} ({len(results)} scenarios)")
+    elif comparable:
+        if baseline_path.exists():
+            drift = bl.diff_baselines(
+                doc, bl.load_baseline(baseline_path),
+                ignore_missing_in_current=subset_run,
+            )
+        else:
+            # The gate is the point: a comparable run with no baseline to
+            # gate against must fail loudly, not silently pass (e.g. the
+            # committed file lost in a bad merge).
+            baseline_missing = True
+
+    elapsed = time.perf_counter() - t0
+    if args.report:
+        report = {
+            "mode": mode,
+            "devices": args.devices,
+            "elapsed_s": elapsed,
+            "scenario_count": len(results),
+            "pruned_count": len(pruned),
+            "fails": [
+                {"scenario": r.scenario_id, "detail": r.detail} for r in fails
+            ],
+            "cross_check_mismatches": mismatches,
+            "property_checks": [dataclass_dict(p) for p in prop_results],
+            "pruned": [
+                {"scenario": sc.scenario_id, "reason": reason}
+                for sc, reason in pruned
+            ],
+            "drift": None if drift is None else {
+                "clean": drift.clean,
+                "added": list(drift.added),
+                "removed": list(drift.removed),
+                "changed": [list(c) for c in drift.changed],
+            },
+            "baseline": doc,
+        }
+        pathlib.Path(args.report).write_text(json.dumps(report, indent=1) + "\n")
+
+    print(
+        f"verify[{mode}]: {len(results) - len(fails)}/{len(results)} scenarios pass, "
+        f"{len(pruned)} cells pruned, {len(mismatches)} cross-check mismatches, "
+        f"{len(prop_results) - len(prop_fails)}/{len(prop_results)} property checks "
+        f"pass, {elapsed:.1f}s"
+    )
+    rc = 0
+    if fails or mismatches or prop_fails:
+        for r in fails:
+            print(f"FAIL {r.scenario_id}: {r.detail}")
+        for m in mismatches:
+            print(f"CROSS-CHECK {m}")
+        for p in prop_fails:
+            print(f"PROPERTY {p.check}[{p.subject}]: {p.detail}")
+        rc = 1
+    if drift is not None:
+        if drift.clean:
+            print(f"baseline: no drift vs {baseline_path}")
+        else:
+            print(f"baseline DRIFT vs {baseline_path} "
+                  "(re-record with --update-baseline if intended):")
+            print(drift.summary())
+            rc = 1
+    elif baseline_missing:
+        print(
+            f"baseline MISSING: {baseline_path} — the drift gate cannot run; "
+            "restore the committed file or re-record with --update-baseline"
+        )
+        rc = 1
+    elif not args.update_baseline:
+        print(
+            "baseline: not gated (grid config differs from the committed "
+            "devices=1 smoke baseline; pass --baseline to compare anyway)"
+        )
+    return rc
+
+
+def dataclass_dict(p):
+    import dataclasses
+
+    return dataclasses.asdict(p)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
