@@ -1,12 +1,15 @@
 """Benchmark harness — one module per paper table/figure family.
 
-``PYTHONPATH=src python -m benchmarks.run [--paper] [--only NAME] [--dtype D]``
+``PYTHONPATH=src python -m benchmarks.run [--paper] [--suite NAME] [--dtype D]``
 
 Prints ``name,us_per_call,derived`` CSV.  ``--paper`` uses the paper's
 exact 10–60 MB sizes (slow on this 1-core container); the default grid is
 1–4 MB with identical structure.  ``--dtype`` selects the key type for the
 suites that sweep the paper's "different integer array types" axis
-(``engine``, ``verify``); the rest pin the paper's int32.
+(``engine``, ``verify``, ``sortd``); the rest pin the paper's int32.  The
+``sortd`` suite additionally honours ``--arrival/--rate/--clients`` (load
+generator shape) and ``--report`` (JSON report path) — see
+``benchmarks/README.md``.
 """
 
 from __future__ import annotations
@@ -23,43 +26,75 @@ from benchmarks import (
     bench_netsim,
     bench_parallel,
     bench_sequential,
+    bench_sortd,
     bench_speedup,
     bench_verify,
 )
 from benchmarks.common import DEFAULT_DTYPE, DTYPES
 
 SUITES = {
-    "sequential": lambda paper, dtype: bench_sequential.run(paper),  # Fig 6.1
-    "parallel": lambda paper, dtype: bench_parallel.run(paper),  # Figs 6.2/6.3
-    "speedup_full": lambda paper, dtype: bench_speedup.run(paper, "full"),  # 6.4–6.7
-    "speedup_half": lambda paper, dtype: bench_speedup.run(paper, "half"),  # 6.8–6.11
-    "efficiency_full": lambda paper, dtype: bench_efficiency.run(paper, "full"),  # 6.12–15
-    "efficiency_half": lambda paper, dtype: bench_efficiency.run(paper, "half"),  # 6.16–19
-    "counters": lambda paper, dtype: bench_counters.run(paper),  # 6.20–6.24
-    "commsteps": lambda paper, dtype: bench_commsteps.run(paper),  # Theorem 3
-    "kernels": lambda paper, dtype: bench_kernels.run(paper),
-    "moe_dispatch": lambda paper, dtype: bench_moe_dispatch.run(paper),
-    "engine": lambda paper, dtype: bench_engine.run(paper, dtype=dtype or DEFAULT_DTYPE),  # autotuned dispatch
-    "netsim": lambda paper, dtype: bench_netsim.run(paper),  # link-level simulation
-    "verify": lambda paper, dtype: bench_verify.run(paper, dtype=dtype),  # conformance grid (None = all dtypes)
+    "sequential": lambda a: bench_sequential.run(a.paper),  # Fig 6.1
+    "parallel": lambda a: bench_parallel.run(a.paper),  # Figs 6.2/6.3
+    "speedup_full": lambda a: bench_speedup.run(a.paper, "full"),  # 6.4–6.7
+    "speedup_half": lambda a: bench_speedup.run(a.paper, "half"),  # 6.8–6.11
+    "efficiency_full": lambda a: bench_efficiency.run(a.paper, "full"),  # 6.12–15
+    "efficiency_half": lambda a: bench_efficiency.run(a.paper, "half"),  # 6.16–19
+    "counters": lambda a: bench_counters.run(a.paper),  # 6.20–6.24
+    "commsteps": lambda a: bench_commsteps.run(a.paper),  # Theorem 3
+    "kernels": lambda a: bench_kernels.run(a.paper),
+    "moe_dispatch": lambda a: bench_moe_dispatch.run(a.paper),
+    "engine": lambda a: bench_engine.run(
+        a.paper, dtype=a.dtype or DEFAULT_DTYPE
+    ),  # autotuned dispatch
+    "netsim": lambda a: bench_netsim.run(a.paper),  # link-level simulation
+    "verify": lambda a: bench_verify.run(a.paper, dtype=a.dtype),  # conformance grid
+    "sortd": lambda a: bench_sortd.run(  # serving layer (DESIGN.md §8)
+        a.paper,
+        dtype=a.dtype or DEFAULT_DTYPE,
+        arrival=a.arrival,
+        rate=a.rate,
+        clients=a.clients,
+        report=a.report,
+    ),
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true", help="paper-exact 10-60MB sizes")
-    ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument(
+        "--only", "--suite", dest="only", default=None, choices=list(SUITES),
+        help="run one suite (--suite is an alias)",
+    )
     ap.add_argument(
         "--dtype", default=None, choices=list(DTYPES),
-        help="key dtype for the dtype-swept suites (engine defaults to "
+        help="key dtype for the dtype-swept suites (engine/sortd default to "
         f"{DEFAULT_DTYPE}; verify sweeps all dtypes unless narrowed)",
+    )
+    sortd = ap.add_argument_group("sortd suite")
+    sortd.add_argument(
+        "--arrival", default="both", choices=("open", "closed", "both", "none"),
+        help="load-generator mode: open-loop (fixed arrival rate), "
+        "closed-loop (N waiting clients), both, or none (throughput gate only)",
+    )
+    sortd.add_argument(
+        "--rate", type=float, default=300.0,
+        help="open-loop arrival rate in requests/s",
+    )
+    sortd.add_argument(
+        "--clients", type=int, default=4,
+        help="closed-loop concurrent client count",
+    )
+    sortd.add_argument(
+        "--report", default="sortd_report.json",
+        help="sortd JSON report path ('' disables)",
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
-        fn(args.paper, args.dtype)
+        fn(args)
 
 
 if __name__ == "__main__":

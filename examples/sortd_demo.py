@@ -1,0 +1,95 @@
+"""sortd demo: the micro-batching sort service end to end (DESIGN.md §8).
+
+Three client threads submit a mixed stream of sort requests — several
+dtypes, lengths spanning multiple shape buckets, plus oversize requests
+that exceed the largest coalescible bucket — while the single sortd worker
+coalesces them into fused ``SortEngine.sort_segments`` device calls.
+Every result is checked against ``np.sort``, then the service's own
+metrics (latency percentiles, pad waste and batch shape per bucket, flush
+reasons) are printed.
+
+    PYTHONPATH=src python examples/sortd_demo.py
+"""
+
+import sys
+import threading
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import SortEngine
+from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
+from repro.serve import Sortd, SortdConfig
+
+CLIENTS = 3
+REQUESTS_PER_CLIENT = 25
+DTYPES = ("int32", "int16", "float32")
+
+
+def client(cid: int, sd: Sortd, failures: list):
+    # Submit the whole stream asynchronously, then collect: in-flight
+    # requests are what the coalescer batches — a strictly synchronous
+    # caller can only ever see batches of one.
+    rng = np.random.default_rng(cid)
+    inflight = []
+    for i in range(REQUESTS_PER_CLIENT):
+        dist = ALL_DISTRIBUTIONS[int(rng.integers(len(ALL_DISTRIBUTIONS)))]
+        dtype = np.dtype(DTYPES[cid % len(DTYPES)])
+        if rng.random() < 0.05:  # oversize → direct engine path
+            n = int(rng.integers(5000, 8000))
+        else:
+            n = int(rng.integers(16, 3000))
+        x = make_array(dist, n, seed=cid * 1000 + i, dtype=dtype)
+        inflight.append((i, dist, dtype, x, sd.submit(x)))
+    for i, dist, dtype, x, fut in inflight:
+        out = fut.result(timeout=120)
+        if not np.array_equal(out, np.sort(x)):
+            failures.append((cid, i, dist, dtype.name, x.size))
+
+
+def run_wave(eng: SortEngine, cfg: SortdConfig, failures: list) -> dict:
+    with Sortd(eng, cfg) as sd:
+        threads = [
+            threading.Thread(target=client, args=(c, sd, failures))
+            for c in range(CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return sd.metrics()
+
+
+def main():
+    cfg = SortdConfig(max_batch=32, max_wait_s=0.005, max_bucket=1 << 12)
+    eng = SortEngine()
+    failures: list = []
+    # Wave 1 pays every first-call compilation; wave 2 rides the engine's
+    # shape-bucketed jit cache (shared across service instances) — the
+    # steady-state latencies a long-running sortd serves at.
+    cold = run_wave(eng, cfg, failures)
+    m = run_wave(eng, cfg, failures)
+    assert not failures, failures
+    print(f"cold wave: p50={cold['latency_ms']['p50']:.1f}ms "
+          f"p99={cold['latency_ms']['p99']:.1f}ms (includes jit compiles); "
+          f"warm wave below")
+    total = CLIENTS * REQUESTS_PER_CLIENT
+    assert m["completed"] == total, m
+
+    print(f"sortd: {total} requests from {CLIENTS} clients, all match np.sort")
+    print(f"engine executables traced: {eng.trace_count} "
+          f"(shape-bucketed warm cache over every (dtype, length, batch) mix)")
+    print(f"flushes: {m['flushes']}  oversize-direct: {m['oversize_direct']}")
+    print(f"overall latency p50={m['latency_ms']['p50']:.1f}ms "
+          f"p99={m['latency_ms']['p99']:.1f}ms")
+    print(f"{'bucket':>16} {'reqs':>5} {'batches':>7} {'mean_B':>6} "
+          f"{'p50_ms':>8} {'p99_ms':>8} {'pad_waste':>9}")
+    for bucket, b in sorted(m["buckets"].items()):
+        print(f"{bucket:>16} {b['requests']:>5} {b['batches']:>7} "
+              f"{b['mean_batch']:>6.1f} {b['p50_ms']:>8.1f} "
+              f"{b['p99_ms']:>8.1f} {b['pad_waste']:>9.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,12 +11,14 @@ from repro.core.topology import OHHCTopology, table_1_1, HHC_SIZE
 from repro.core.schedule import AccumulationSchedule, payload_bytes_per_round
 from repro.core.partition import (
     default_capacity,
+    pack_segments,
     paper_bucket_ids,
     sampled_splitters,
     splitter_bucket_ids,
     bucket_counts,
     bucket_ranks,
     scatter_to_buckets,
+    unpack_segments,
     unscatter,
 )
 from repro.core.ohhc_sort import (
@@ -30,21 +32,27 @@ from repro.core.ohhc_sort import (
 )
 from repro.core.dist_sort import dist_sort, host_check_globally_sorted
 from repro.core.engine import (
+    SEGMENT_BITONIC_MAX,
     InputStats,
     SortEngine,
     SortPlan,
     autotune_capacity,
+    choose_batch_plan,
     choose_plan,
+    estimate_batch_stats,
     estimate_stats,
     x64_enabled,
 )
 
 __all__ = [
+    "SEGMENT_BITONIC_MAX",
     "InputStats",
     "SortEngine",
     "SortPlan",
     "autotune_capacity",
+    "choose_batch_plan",
     "choose_plan",
+    "estimate_batch_stats",
     "estimate_stats",
     "x64_enabled",
     "OHHCTopology",
@@ -53,6 +61,8 @@ __all__ = [
     "AccumulationSchedule",
     "payload_bytes_per_round",
     "default_capacity",
+    "pack_segments",
+    "unpack_segments",
     "paper_bucket_ids",
     "sampled_splitters",
     "splitter_bucket_ids",

@@ -36,8 +36,12 @@ Sort — ``ohhc_sort_sim`` (jit/vmap simulated processors), ``ohhc_sort_host``
    repeated traffic of nearby sizes never recompiles.  ``trace_count``
    exposes actual retraces for tests and monitoring.
 
-Batched entry points: ``sort_many`` vmaps the simulated path over a request
-batch; ``sort_pairs`` is the key/payload sort (bitonic pair kernel) behind
+Batched entry points: ``sort_segments`` fuses many variable-length arrays
+into ONE padded ``(B, Lbucket)`` vmapped device call (worst-row stats and
+capacity measured in one vectorized pass — the device-side foundation of
+the ``repro.serve.sortd`` micro-batching service, DESIGN.md §8);
+``sort_many`` is its list-of-arrays wrapper; ``sort_pairs`` is the
+key/payload sort (bitonic pair kernel) behind
 ``repro.serve.engine.ServeEngine``'s length-ordering hot path.
 """
 
@@ -59,6 +63,11 @@ from repro.kernels import ops
 # Granularity cap for stats histograms: coarser than P only ever
 # *over*-estimates the max bucket fraction (refining buckets can't raise it).
 _MAX_STAT_BUCKETS = 256
+
+# Largest row bucket the segmented batch path sorts with the direct
+# sentinel-padded bitonic row kernel instead of the P-way bucket machinery
+# (see choose_batch_plan).
+SEGMENT_BITONIC_MAX = 1 << 13
 
 
 def x64_enabled() -> bool:
@@ -162,6 +171,111 @@ def estimate_stats(
     )
 
 
+def estimate_batch_stats(
+    padded: np.ndarray,
+    seg_lens,
+    *,
+    num_buckets: int = 64,
+    sample_size: int = 256,
+) -> InputStats:
+    """Worst-row ``InputStats`` for a packed ``(B, row_len)`` segment batch.
+
+    One fused device call (``SortEngine.sort_segments``) must pick a single
+    capacity for every row, so the quantity that matters is the *worst row's*
+    max bucket fraction — a blended whole-batch histogram would wash a
+    single pathological row out of the estimate and buy an overflow retry
+    per flush.  Everything here is vectorized numpy over a strided
+    ``(B, s)`` per-row sample (no per-row Python loop — the point of the
+    segmented path):
+
+    * per-row equal-width bucket counts via one offset ``bincount`` →
+      ``f_max_paper``.  The sample is bucketed against each row's **true**
+      min/max (one vectorized masked pass over the packed matrix — we paid
+      for the pack already), not the sample's own range: a clustered row
+      with tail outliers (the paper's "local" class) has a true range the
+      sample misses, and the kernel's equal-width rule uses the true range —
+      sample-range bucketing underestimates its hot bucket by >10×;
+    * per-row top-duplicate mass via run lengths of the sorted sample
+      (``dup_top_frac``); under sampled (quantile) splitters only
+      indivisible duplicate mass can overload a bucket, so
+      ``f_max_sampled = max(1/num_buckets, dup_top_frac)``;
+    * ``sortedness`` is the mean over rows (label/diagnostics only — batch
+      method choice keys off skew and duplicates).
+
+    Per-row fractions are scaled by ``len/row_len`` before the worst-row
+    reduction: capacity is measured in *elements* of a padded row, and a
+    short row's hot bucket holds at most its own length — without the
+    scaling one 1-element row (f̂ = 1.0 by definition) would size every
+    batch buffer at the full row length.  Rows of length 0 are masked out
+    of every reduction.
+    """
+    padded = np.asarray(padded)
+    lens = np.asarray(seg_lens, dtype=np.int64).ravel()
+    B, row_len = padded.shape
+    total = int(lens.sum())
+    dtype = str(padded.dtype)
+    nb = int(min(num_buckets, _MAX_STAT_BUCKETS))
+    live = lens > 0
+    if total == 0 or not live.any():
+        return InputStats(total, dtype, 0, 1.0, 1.0, 0.0, 0.0, 0.0, nb)
+    s = int(min(row_len, sample_size))
+    # Strided per-row sample over each row's own valid prefix: index
+    # (j·len)//s < len for every len ≥ 1, so no pad cell is ever sampled
+    # from a live row.
+    idx = (np.arange(s)[None, :] * lens[:, None]) // s
+    samp = padded[np.arange(B)[:, None], np.clip(idx, 0, row_len - 1)]
+    samp = samp.astype(np.float64)
+
+    # True per-row range over the valid prefix (pad cells masked out): the
+    # kernel's equal-width buckets use it, so the estimate must too.
+    pos = np.arange(row_len)[None, :]
+    valid = pos < lens[:, None]
+    pf = padded.astype(np.float64)
+    lo = np.where(valid, pf, np.inf).min(axis=1)
+    hi = np.where(valid, pf, -np.inf).max(axis=1)
+    lo = np.where(live, lo, 0.0)
+    width = np.where(live, (hi - lo) / nb, 1.0)
+    width = np.where(width > 0, width, 1.0)
+    # clip in float BEFORE the integer cast: dead rows sample their fill
+    # value (dtype max / inf), which overflows a float→int64 cast
+    ids = np.clip((samp - lo[:, None]) / width[:, None], 0, nb - 1).astype(np.int64)
+    counts = np.bincount(
+        (ids + np.arange(B)[:, None] * nb).ravel(), minlength=B * nb
+    ).reshape(B, nb)
+    # elements-of-a-padded-row units: f̂_row · (len/row_len)
+    row_scale = lens / float(row_len)
+    f_rows = counts.max(axis=1) / s * row_scale
+    f_max_paper = float(f_rows[live].max())
+
+    srt = np.sort(samp, axis=1)
+    change = np.ones((B, s), bool)
+    change[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    run_ids = np.cumsum(change, axis=1) - 1  # < s per row
+    run_counts = np.bincount(
+        (run_ids + np.arange(B)[:, None] * s).ravel(), minlength=B * s
+    ).reshape(B, s)
+    dup_rows = run_counts.max(axis=1) / s * row_scale
+    dup_top_frac = float(dup_rows[live].max())
+
+    diffs = np.diff(samp, axis=1)
+    if diffs.shape[1]:
+        per_row = np.mean(diffs > 0, axis=1) - np.mean(diffs < 0, axis=1)
+        sortedness = float(per_row[live].mean())
+    else:
+        sortedness = 1.0
+    return InputStats(
+        n=total,
+        dtype=dtype,
+        sample_size=int(live.sum()) * s,
+        sortedness=sortedness,
+        skew=f_max_paper * nb,
+        dup_top_frac=dup_top_frac,
+        f_max_paper=f_max_paper,
+        f_max_sampled=max(1.0 / nb, dup_top_frac),
+        num_buckets=nb,
+    )
+
+
 # --------------------------------------------------------------------------
 # Dispatch policy (pure — DESIGN.md §4 decision table)
 # --------------------------------------------------------------------------
@@ -209,6 +323,49 @@ def autotune_capacity(
     cap = -(-raw // base) * base  # quantize up to a multiple of the heuristic
     cap = min(cap, padded_n + (-padded_n) % 8)
     return cap
+
+
+def choose_batch_plan(
+    stats: InputStats | None,
+    num_buckets: int,
+    padded_n: int,
+    *,
+    margin: float = 1.25,
+    bitonic_max: int = SEGMENT_BITONIC_MAX,
+) -> SortPlan:
+    """Plan ONE fused ``(B, padded_n)`` sim call for a segment batch.
+
+    The batch twin of :func:`choose_plan`'s sim row (DESIGN.md §8): a
+    homogeneous-dtype batch always takes the vmapped sim path — that is the
+    point of coalescing — so the decisions left are the per-row kernel and
+    one shared capacity:
+
+    * rows up to ``bitonic_max`` take the ``bitonic`` method — a direct
+      sentinel-padded row sort with **no** value partitioning.  At serving
+      row sizes the P-way bucket machinery (O(L·P) rank matrix + scatter +
+      P per-bucket sorts) costs an order of magnitude more device time than
+      sorting the row outright, needs no capacity, and is immune to value
+      skew — the fused batch IS the parallelism;
+    * longer rows run the paper's bucket path: ``sampled`` splitters when
+      the worst row is skewed but not duplicate-dominated (quantile
+      splitters cannot split one repeated value), else the equal-width
+      rule, with capacity from :func:`autotune_capacity` on the worst-row
+      stats — one pathological row sizes the batch buffer rather than
+      overflowing it.
+    """
+    if padded_n <= bitonic_max:
+        return SortPlan(
+            "sim", "bitonic", None, padded_n,
+            f"segmented bitonic rows (Lbucket={padded_n} ≤ {bitonic_max})",
+        )
+    if stats is None:
+        raise ValueError("choose_batch_plan needs stats for the bucket path")
+    method = "sampled" if (stats.skewed and stats.dup_top_frac <= 0.25) else "paper"
+    cap = autotune_capacity(stats, method, num_buckets, padded_n, margin=margin)
+    return SortPlan(
+        "sim", method, cap, padded_n,
+        f"segmented batch ({stats.label} worst row), capacity={cap}",
+    )
 
 
 def choose_plan(
@@ -454,6 +611,16 @@ class SortEngine:
         if fn is None:
             def traced(x_pad, n_valid):
                 self.trace_count += 1  # runs at trace time only
+                if method == "bitonic":
+                    # Direct sentinel-padded row sort (segmented batch rows,
+                    # DESIGN.md §8): pad cells carry the dtype max, which
+                    # sorts to the tail, so the valid prefix is exact even
+                    # when real keys equal the sentinel.  Counts are the
+                    # trivial per-row total — this kernel cannot overflow.
+                    return (
+                        self.local_sort(x_pad),
+                        jnp.reshape(n_valid.astype(jnp.int32), (1,)),
+                    )
                 return _sim_sort_padded(
                     x_pad,
                     n_valid,
@@ -530,43 +697,143 @@ class SortEngine:
         return np.asarray(out)[:n]
 
     # --------------------------------------------------------------- batched
-    def sort_many(self, xs: Sequence) -> list[np.ndarray]:
-        """Sort a batch of arrays with ONE vmapped executable.
+    def plan_segments(self, keys, seg_lens) -> SortPlan:
+        """Batch plan (method + shared capacity) for ``sort_segments`` traffic.
 
-        All rows pad to the batch's common pow2 shape bucket; capacity/method
-        come from the worst row so a single compiled program serves the whole
-        batch (the serve-traffic shape: many similar-length requests).
+        Packs, measures worst-row stats (``estimate_batch_stats``) and runs
+        the batch policy (``choose_batch_plan``) without executing the sort —
+        the introspection hook the sortd service and benchmarks use.
         """
-        arrs = [np.asarray(a).ravel() for a in xs]
-        if not arrs:
-            return []
-        dtype = arrs[0].dtype
-        if any(a.dtype != dtype for a in arrs):
-            raise ValueError("sort_many requires a homogeneous dtype batch")
-        max_n = max(a.size for a in arrs)
-        if max_n <= 1:
-            return [a.copy() for a in arrs]
-        padded_n = ops.bucketed_length(max_n)
-        P = self.topo.total_procs
-        per_stats = [self.stats(a) for a in arrs]
-        method = "sampled" if any(
-            s.skewed and s.dup_top_frac <= 0.25 for s in per_stats
-        ) else "paper"
-        capacity = max(
-            autotune_capacity(s, method, P, padded_n, margin=self.margin)
-            for s in per_stats
+        keys = np.asarray(keys).ravel()
+        lens = np.asarray(seg_lens, dtype=np.int64).ravel()
+        padded_n = ops.bucketed_length(int(lens.max()) if lens.size else 1)
+        stats = None
+        if padded_n > SEGMENT_BITONIC_MAX:
+            padded = partition.pack_segments(keys, lens, padded_n)
+            stats = estimate_batch_stats(
+                padded, lens,
+                num_buckets=min(self.topo.total_procs, _MAX_STAT_BUCKETS),
+            )
+        return choose_batch_plan(
+            stats, self.topo.total_procs, padded_n, margin=self.margin
         )
-        batch = np.zeros((len(arrs), padded_n), dtype)
-        for i, a in enumerate(arrs):
-            batch[i, : a.size] = a
-        ns = np.asarray([a.size for a in arrs], np.int32)
-        xj = jnp.asarray(batch)
+
+    def sort_segments(
+        self, keys, seg_lens, *, plan: SortPlan | None = None,
+        return_padded: bool = False,
+    ):
+        """Sort ``B`` variable-length segments in ONE padded device call.
+
+        ``keys`` is the flat concatenation of the segments and ``seg_lens``
+        their lengths — the fused serving primitive (DESIGN.md §8): the whole
+        batch packs into one ``(B, Lbucket)`` sentinel-padded matrix
+        (``partition.pack_segments``, ``Lbucket`` the pow2 shape bucket of the
+        longest segment), batch stats and capacity come from one vectorized
+        worst-row measurement (no per-row Python loop), and a single vmapped
+        executable from the warm jit cache sorts every row.  Both traced
+        axes are shape-bucketed: rows pad to the pow2 ``Lbucket`` and the
+        batch axis pads to a pow2 with zero-length phantom rows, so a
+        serving stream of arbitrary (B, length) mixes reuses a handful of
+        executables.  Overflow escalates capacity ×2 exactly like ``sort``,
+        so results are always exact.
+
+        Returns a list of sorted numpy segments; with ``return_padded=True``
+        the raw device-resident ``(B, Lbucket)`` output instead (row ``i``'s
+        sorted segment is ``out[i, :seg_lens[i]]``) — nothing but the tiny
+        per-row counts check crosses back to the host, so pipelines can keep
+        chaining device work without a payload sync.
+
+        64-bit keys without jax x64 have no exact jit path (``choose_plan``'s
+        host rule); they fall back to an exact per-segment host sort and
+        cannot honor ``return_padded``.
+        """
+        keys = np.asarray(keys).ravel()
+        lens = np.asarray(seg_lens, dtype=np.int64).ravel()
+        if (lens < 0).any():
+            raise ValueError("sort_segments: negative segment length")
+        if int(lens.sum()) != keys.size:
+            raise ValueError(
+                f"sort_segments: seg_lens sum to {int(lens.sum())} "
+                f"but keys has {keys.size} elements"
+            )
+        B = int(lens.size)
+        total = keys.size
+        max_n = int(lens.max()) if B else 0
+        if keys.dtype.itemsize == 8 and not x64_enabled():
+            if return_padded:
+                raise ValueError(
+                    "return_padded needs the jit path; 64-bit keys without "
+                    "x64 only have the exact host fallback"
+                )
+            outs = [
+                np.sort(seg)
+                for seg in np.split(keys, np.cumsum(lens)[:-1])
+            ] if B else []
+            self.last_report = {
+                "plan": SortPlan(
+                    "host", "paper", None, None,
+                    f"{keys.dtype} segments without jax x64: exact host fallback",
+                ),
+                "n": total, "batch": B, "overflow_retries": 0,
+            }
+            return outs
+        padded_n = ops.bucketed_length(max(max_n, 1))
+        if B == 0 or max_n <= 1:
+            # Nothing to sort row-wise; keep the trivial case off the device.
+            self.last_report = {
+                "plan": SortPlan("sim", "paper", None, padded_n, "trivial batch"),
+                "n": total, "batch": B, "overflow_retries": 0,
+            }
+            if return_padded:
+                return jnp.asarray(partition.pack_segments(keys, lens, padded_n))
+            return partition.unpack_segments(
+                partition.pack_segments(keys, lens, padded_n), lens
+            )
+        # The batch axis is part of the traced shape: without bucketing it,
+        # every distinct flush size B would compile its own executable (a
+        # ~seconds stall per size on this container).  Pad B up to a pow2
+        # with zero-length phantom rows — they carry no valid elements, so
+        # stats, capacity and counts ignore them; worst-case extra row work
+        # is bounded at 2× and the executable count at log2(max_batch).
+        # Serving-size (bitonic) rows get a floor of 8 — phantom rows are
+        # cheap there and the floor collapses the smallest batch sizes onto
+        # one executable; bucket-path rows are expensive enough that a
+        # phantom row floor would dominate a small batch's device time.
+        b_floor = 3 if padded_n <= SEGMENT_BITONIC_MAX else 0
+        B_pad = 1 << max(int(B - 1).bit_length(), b_floor)
+        lens_pad = np.zeros(B_pad, np.int64)
+        lens_pad[:B] = lens
+        padded = partition.pack_segments(keys, lens_pad, padded_n)
+        stats = None
+        if plan is None:
+            if padded_n <= SEGMENT_BITONIC_MAX:
+                # the bitonic row kernel needs no capacity → no stats pass
+                plan = choose_batch_plan(
+                    None, self.topo.total_procs, padded_n, margin=self.margin
+                )
+            else:
+                stats = estimate_batch_stats(
+                    padded, lens_pad,
+                    num_buckets=min(self.topo.total_procs, _MAX_STAT_BUCKETS),
+                )
+                plan = choose_batch_plan(
+                    stats, self.topo.total_procs, padded_n, margin=self.margin
+                )
+        if plan.path != "sim":
+            raise ValueError(f"sort_segments only runs the sim path, got {plan.path!r}")
+        method = plan.method
+        capacity = 0 if method == "bitonic" else (
+            plan.capacity
+            or partition.default_capacity(padded_n, self.topo.total_procs)
+        )
+        xj = jnp.asarray(padded)
+        nsj = jnp.asarray(lens_pad.astype(np.int32))
         retries = 0
         while True:
-            fn = self._get_sim_fn(padded_n, capacity, method, dtype, True)
-            out, counts = fn(xj, jnp.asarray(ns))
+            fn = self._get_sim_fn(padded_n, capacity, method, keys.dtype, True)
+            out, counts = fn(xj, nsj)
             per_row = np.asarray(jnp.sum(counts, axis=-1))
-            if np.array_equal(per_row, ns):
+            if np.array_equal(per_row, lens_pad):
                 break
             if capacity >= padded_n:
                 raise AssertionError("overflow with capacity == padded_n")
@@ -574,12 +841,33 @@ class SortEngine:
             capacity += (-capacity) % 8
             retries += 1
         self.last_report = {
-            "plan": SortPlan("sim", method, capacity, padded_n, "sort_many batch"),
-            "n": int(ns.sum()), "overflow_retries": retries,
-            "batch": len(arrs),
+            "plan": SortPlan("sim", method, capacity, padded_n, plan.reason),
+            "n": total, "stats": stats, "batch": B, "batch_padded": B_pad,
+            "overflow_retries": retries,
+            "pad_cells": B * padded_n - total,  # pad-waste the metrics layer reports
         }
-        out_np = np.asarray(out)
-        return [out_np[i, : a.size].copy() for i, a in enumerate(arrs)]
+        if return_padded:
+            return out[:B]
+        return partition.unpack_segments(np.asarray(out)[:B], lens)
+
+    def sort_many(self, xs: Sequence) -> list[np.ndarray]:
+        """Sort a batch of arrays with ONE vmapped executable.
+
+        Thin wrapper over ``sort_segments``: concatenates the batch into the
+        flat segmented form and fuses it into a single padded device call —
+        the pre-sortd per-array stats/dispatch loop is gone (DESIGN.md §8).
+        """
+        arrs = [np.asarray(a).ravel() for a in xs]
+        if not arrs:
+            return []
+        dtype = arrs[0].dtype
+        if any(a.dtype != dtype for a in arrs):
+            raise ValueError("sort_many requires a homogeneous dtype batch")
+        lens = [a.size for a in arrs]
+        if max(lens) <= 1:
+            return [a.copy() for a in arrs]
+        flat = np.concatenate(arrs) if len(arrs) > 1 else arrs[0]
+        return self.sort_segments(flat, lens)
 
     def sort_pairs(self, keys, vals):
         """Key/payload sort with the bitonic pair kernel + warm shape cache.

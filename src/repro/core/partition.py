@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def max_sentinel(dtype):
@@ -52,6 +53,73 @@ def default_capacity(n: int, num_buckets: int) -> int:
     cap = int(-(-2 * n // num_buckets))
     cap += (-cap) % 8
     return cap
+
+
+def pack_segments(
+    keys,
+    seg_lens,
+    row_len: int,
+    *,
+    fill_value=None,
+    align: str = "left",
+) -> np.ndarray:
+    """Pack ``B`` concatenated variable-length segments into a ``(B, row_len)``
+    dense matrix — the host half of the segmented batch path (DESIGN.md §8).
+
+    ``keys`` is the flat concatenation of the segments, ``seg_lens`` their
+    lengths in order.  This is a *host* (numpy) utility on purpose: requests
+    arrive as host arrays, and one vectorized boolean-mask scatter packs the
+    whole batch in a single pass — the device then sees exactly one
+    ``(B, row_len)`` transfer instead of ``B`` small ones.
+
+    ``align='left'`` places each segment at the row start (the sort layout:
+    the valid prefix is ``row[:len]``); ``align='right'`` right-aligns the
+    content (the serving left-pad layout — token ends line up so decode
+    positions agree across the batch).  ``fill_value`` defaults to the dtype
+    max so left-aligned pad tails sort to the end.
+    """
+    keys = np.asarray(keys).ravel()
+    lens = np.asarray(seg_lens, dtype=np.int64).ravel()
+    if (lens < 0).any():
+        raise ValueError("pack_segments: negative segment length")
+    if int(lens.sum()) != keys.size:
+        raise ValueError(
+            f"pack_segments: seg_lens sum to {int(lens.sum())} "
+            f"but keys has {keys.size} elements"
+        )
+    if lens.size and int(lens.max()) > row_len:
+        raise ValueError(
+            f"pack_segments: longest segment ({int(lens.max())}) "
+            f"exceeds row_len ({row_len})"
+        )
+    if fill_value is None:
+        fill_value = (
+            np.iinfo(keys.dtype).max
+            if np.issubdtype(keys.dtype, np.integer)
+            else np.inf
+        )
+    out = np.full((lens.size, row_len), fill_value, keys.dtype)
+    pos = np.arange(row_len)[None, :]
+    if align == "left":
+        mask = pos < lens[:, None]
+    elif align == "right":
+        mask = pos >= row_len - lens[:, None]
+    else:
+        raise ValueError(f"pack_segments: unknown align {align!r}")
+    # Row-major mask assignment consumes ``keys`` in concatenation order.
+    out[mask] = keys
+    return out
+
+
+def unpack_segments(padded, seg_lens) -> list[np.ndarray]:
+    """Inverse of :func:`pack_segments` (left-aligned): row prefixes as copies."""
+    padded = np.asarray(padded)
+    lens = np.asarray(seg_lens, dtype=np.int64).ravel()
+    if padded.shape[0] != lens.size:
+        raise ValueError(
+            f"unpack_segments: {padded.shape[0]} rows vs {lens.size} lengths"
+        )
+    return [padded[i, : int(n)].copy() for i, n in enumerate(lens)]
 
 
 def paper_bucket_ids(x: jax.Array, num_buckets: int) -> jax.Array:

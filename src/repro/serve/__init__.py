@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.sortd import Sortd, SortdConfig, QueueFull
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "Sortd", "SortdConfig", "QueueFull"]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import partition
 from repro.core.engine import SortEngine
 from repro.models.common import AxisRules, NO_SHARD
 
@@ -46,22 +47,38 @@ class ServeEngine:
 
     # ------------------------------------------------------- batch formation
     def order_by_length(self, requests: list[Request]) -> list[Request]:
-        """Sort requests by prompt length via the engine's warm pair-sort path."""
+        """Sort requests by prompt length via the engine's warm pair-sort path.
+
+        One device call and one host transfer per batch (the permutation must
+        come back to reorder a Python list); the sorted *payloads* of the
+        segmented batch path stay on device (``SortEngine.sort_segments`` with
+        ``return_padded=True``, DESIGN.md §8) — only this index sort syncs.
+        """
+        if len(requests) <= 1:
+            return list(requests)
         lens = jnp.asarray([len(r.prompt) for r in requests], jnp.int32)
         idx = jnp.arange(len(requests), dtype=jnp.int32)
         _, order = self.sorter.sort_pairs(lens, idx)
         return [requests[int(i)] for i in np.asarray(order)]
 
     def _pad_batch(self, requests: list[Request]):
-        B = len(requests)
-        L = max(len(r.prompt) for r in requests)
-        toks = np.zeros((B, L), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, L - len(r.prompt):] = r.prompt  # left-pad → aligned ends
+        lens = [len(r.prompt) for r in requests]
+        L = max(lens)
+        # left-pad → aligned ends (right-aligned content): one vectorized
+        # pack instead of a per-request copy loop
+        toks = partition.pack_segments(
+            np.concatenate([r.prompt for r in requests]) if requests else
+            np.zeros(0, np.int32),
+            lens, L, fill_value=0, align="right",
+        ).astype(np.int32)
         return jnp.asarray(toks), L
 
     # --------------------------------------------------------------- serving
     def generate(self, requests: list[Request], greedy: bool = True) -> dict[int, list[int]]:
+        if not requests:
+            # _pad_batch's max() over an empty sequence raised a bare
+            # ValueError here; an empty batch is simply an empty result.
+            return {}
         requests = self.order_by_length(requests)
         toks, L = self._pad_batch(requests)
         B = toks.shape[0]

@@ -1,0 +1,400 @@
+"""sortd — adaptive micro-batching sort service over ``SortEngine``
+(DESIGN.md §8).
+
+The paper's evaluation is many concurrent sorts over one OHHC, and its
+related work measures that the *mode of execution* — not the algorithm —
+dominates throughput.  sortd is that layer for this repo: callers submit
+individual sort requests; a single worker thread coalesces them into
+micro-batches and serves each batch with ONE fused device call
+(``SortEngine.sort_segments``), so P small requests cost one dispatch, one
+transfer, and one warm-cache executable instead of P of each.
+
+Mechanics:
+
+* **Bounded request queue** (``SortdConfig.max_queue``): admission control.
+  When full, ``submit`` either raises :class:`QueueFull` immediately or
+  blocks (``block_on_full``) — backpressure propagates to producers instead
+  of growing an unbounded backlog.
+* **Adaptive coalescing**: requests bin by ``(dtype, pow2 shape bucket)`` —
+  the same bucketing rule as the engine's warm jit cache
+  (``repro.kernels.ops.bucketed_length``), so every flush lands on an
+  already-compiled executable.  Mixed dtypes are never coalesced (a fused
+  batch is one device array), and rows only ever pad within their own
+  bucket, which bounds per-batch pad waste below 50% + the deadline's
+  short-row tail.
+* **Max-wait deadline** (``max_wait_s``): a bin flushes when it reaches
+  ``max_batch`` rows (reason ``full``) or when its *oldest* request has
+  waited the deadline (reason ``deadline``) — latency is bounded even at
+  one request per epoch, throughput is batched under load.  The adaptive
+  part is exactly this pair: at low arrival rates the deadline dominates
+  (batch of 1, latency ≈ max_wait), at high rates ``max_batch`` dominates
+  (amortization without waiting).
+* **Oversize fallback**: requests longer than ``max_bucket`` never coalesce
+  (their pad waste would dominate a batch); they are served inline through
+  the engine's own per-array dispatch (``SortEngine.sort`` — which may
+  itself pick the host path for huge inputs).
+* **Metrics**: per-request latency (p50/p99 over a sliding window) and
+  pad-waste per shape bucket, flush-reason counters, queue depth highwater,
+  rejected count — ``metrics()`` returns a JSON-ready dict; the ``sortd``
+  benchmark suite and ``tools/verify.py --sortd`` read it.
+
+Threading contract: any number of producer threads may call ``submit``;
+all engine/device work happens on the single worker thread, so the jit
+cache and ``last_report`` see strictly serial traffic.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core.engine import SortEngine
+from repro.kernels import ops
+
+__all__ = ["Sortd", "SortdConfig", "QueueFull"]
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the bounded queue is at capacity."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SortdConfig:
+    """Tuning knobs for the micro-batching service.
+
+    max_queue:      bounded request queue length (backpressure boundary).
+    max_batch:      flush a bin when it holds this many rows.
+    max_wait_s:     flush a bin when its oldest row has waited this long.
+    max_bucket:     largest coalescible shape bucket; longer requests take
+                    the direct per-array engine path.
+    block_on_full:  submit blocks (True) or raises QueueFull (False).
+    latency_window: per-bucket sliding-window size for the percentiles.
+    """
+
+    max_queue: int = 1024
+    max_batch: int = 64
+    max_wait_s: float = 0.005
+    max_bucket: int = 1 << 15
+    block_on_full: bool = False
+    latency_window: int = 4096
+
+
+@dataclasses.dataclass
+class _Pending:
+    keys: np.ndarray
+    t_enqueue: float
+    future: Future
+
+
+class _Stop:
+    pass
+
+
+_STOP = _Stop()
+
+
+class _BucketStats:
+    __slots__ = ("requests", "batches", "rows", "pad_cells", "valid_cells", "lat_s")
+
+    def __init__(self, window: int):
+        self.requests = 0
+        self.batches = 0
+        self.rows = 0
+        self.pad_cells = 0
+        self.valid_cells = 0
+        self.lat_s = collections.deque(maxlen=window)
+
+
+class Sortd:
+    """The service.  Use as a context manager or call ``close()`` yourself.
+
+    >>> with Sortd(SortEngine()) as sd:
+    ...     fut = sd.submit(np.array([3, 1, 2], np.int32))
+    ...     fut.result()
+    array([1, 2, 3], dtype=int32)
+    """
+
+    def __init__(
+        self,
+        engine: SortEngine | None = None,
+        config: SortdConfig | None = None,
+        *,
+        start: bool = True,
+    ):
+        self.engine = engine if engine is not None else SortEngine()
+        self.config = config if config is not None else SortdConfig()
+        self._queue: queue.Queue = queue.Queue(maxsize=self.config.max_queue)
+        self._bins: dict[tuple[str, int], list[_Pending]] = {}
+        self._lock = threading.Lock()  # guards metrics only
+        # Serializes the closed-check-then-enqueue in submit() against
+        # close(): without it a racing submit can enqueue after the worker
+        # drained and exited, leaving a Future that never resolves.
+        self._close_lock = threading.Lock()
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        # metrics (under _lock)
+        self._completed = 0
+        self._oversize_direct = 0
+        self._rejected = 0
+        self._failed = 0
+        self._flushes = {"full": 0, "deadline": 0, "close": 0}
+        self._max_queue_depth = 0
+        self._buckets: dict[str, _BucketStats] = {}
+        self._all_lat_s: collections.deque = collections.deque(
+            maxlen=self.config.latency_window
+        )
+        if start:
+            self.start()
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "Sortd":
+        """Start the worker thread (idempotent)."""
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, name="sortd-worker", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop accepting requests, flush everything queued, join the worker."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+            # Under the close lock: every submit that passed its closed-check
+            # has already enqueued, so its item sits before this sentinel and
+            # the worker's final drain serves it.
+            if self._thread is not None:
+                self._queue.put(_STOP)
+        if self._thread is None:
+            # never started: serve the backlog inline so no future dangles
+            self._drain_queue()
+            self._flush_all("close")
+            return
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "Sortd":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- submission
+    def submit(self, keys) -> Future:
+        """Enqueue one sort request; the Future resolves to the sorted array.
+
+        Raises :class:`QueueFull` when the bounded queue is at capacity and
+        ``block_on_full`` is off; blocks otherwise.  Raises RuntimeError
+        after ``close()``.
+        """
+        arr = np.asarray(keys).ravel()
+        item = _Pending(arr, time.monotonic(), Future())
+        with self._close_lock:
+            if self._closed:
+                raise RuntimeError("sortd is closed")
+            try:
+                self._queue.put(item, block=self.config.block_on_full)
+            except queue.Full:
+                with self._lock:
+                    self._rejected += 1
+                raise QueueFull(
+                    f"sortd queue at capacity ({self.config.max_queue})"
+                ) from None
+        with self._lock:
+            self._max_queue_depth = max(self._max_queue_depth, self._queue.qsize())
+        return item.future
+
+    def sort(self, keys, timeout: float | None = 60.0) -> np.ndarray:
+        """Synchronous convenience wrapper: ``submit(keys).result()``."""
+        return self.submit(keys).result(timeout=timeout)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        """JSON-ready snapshot: latency percentiles + pad waste per bucket."""
+
+        def pct(d, q):
+            return float(np.percentile(np.asarray(d), q)) * 1e3 if d else 0.0
+
+        with self._lock:
+            buckets = {}
+            for key, b in self._buckets.items():
+                total_cells = b.pad_cells + b.valid_cells
+                buckets[key] = {
+                    "requests": b.requests,
+                    "batches": b.batches,
+                    "mean_batch": b.rows / b.batches if b.batches else 0.0,
+                    "p50_ms": pct(b.lat_s, 50),
+                    "p99_ms": pct(b.lat_s, 99),
+                    "pad_waste": b.pad_cells / total_cells if total_cells else 0.0,
+                }
+            return {
+                "completed": self._completed,
+                "failed": self._failed,
+                "oversize_direct": self._oversize_direct,
+                "rejected": self._rejected,
+                "flushes": dict(self._flushes),
+                "queue_depth": self._queue.qsize(),
+                "max_queue_depth": self._max_queue_depth,
+                "latency_ms": {
+                    "p50": pct(self._all_lat_s, 50),
+                    "p99": pct(self._all_lat_s, 99),
+                },
+                "buckets": buckets,
+            }
+
+    # ------------------------------------------------------------- worker
+    def _bin_key(self, arr: np.ndarray) -> tuple[str, int]:
+        return (str(arr.dtype), ops.bucketed_length(max(arr.size, 1)))
+
+    def _next_deadline(self) -> float | None:
+        if not self._bins:
+            return None
+        oldest = min(batch[0].t_enqueue for batch in self._bins.values())
+        return oldest + self.config.max_wait_s
+
+    def _run(self) -> None:
+        while True:
+            deadline = self._next_deadline()
+            timeout = (
+                max(0.0, deadline - time.monotonic()) if deadline is not None else None
+            )
+            try:
+                item = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            stop = isinstance(item, _Stop)
+            if item is not None and not stop:
+                self._route(item)
+            if not stop:
+                # Greedy drain: coalesce the backlog before looking at
+                # deadlines.  Without this, a backlog built up during a long
+                # flush arrives one item per wakeup with its deadline already
+                # expired — every flush degenerates to batch size 1 exactly
+                # when the server is overloaded (the anti-batching death
+                # spiral).  _route flushes any bin that reaches max_batch.
+                # The drain is BUDGETED at max_queue items: producers with
+                # block_on_full refill the queue as fast as it drains, and an
+                # unbounded drain would then starve a lone expired request in
+                # a cold (dtype, bucket) bin forever — the budget caps the
+                # wait at one backlog's worth of routing before deadlines are
+                # honored again.  (Breaking out as soon as any deadline has
+                # expired is wrong the other way: a burst that arrives during
+                # a flush is entirely past its deadline, and per-item breaks
+                # would flush it one request at a time.)
+                budget = max(self.config.max_queue, 1)
+                while budget > 0:
+                    try:
+                        nxt = self._queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if isinstance(nxt, _Stop):
+                        stop = True
+                        break
+                    self._route(nxt)
+                    budget -= 1
+            if stop:
+                self._drain_queue()
+                self._flush_all("close")
+                return
+            self._flush_expired()
+
+    def _drain_queue(self) -> None:
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if not isinstance(item, _Stop):
+                self._route(item)
+
+    def _route(self, item: _Pending) -> None:
+        if item.keys.size > self.config.max_bucket:
+            self._serve_direct(item)
+            return
+        key = self._bin_key(item.keys)
+        self._bins.setdefault(key, []).append(item)
+        if len(self._bins[key]) >= self.config.max_batch:
+            self._flush(key, "full")
+
+    def _flush_expired(self) -> None:
+        now = time.monotonic()
+        for key in [
+            k
+            for k, batch in self._bins.items()
+            if now - batch[0].t_enqueue >= self.config.max_wait_s
+        ]:
+            self._flush(key, "deadline")
+
+    def _flush_all(self, reason: str) -> None:
+        for key in list(self._bins):
+            self._flush(key, reason)
+
+    def _flush(self, key: tuple[str, int], reason: str) -> None:
+        batch = self._bins.pop(key)
+        dtype_str, bucket = key
+        lens = [p.keys.size for p in batch]
+        try:
+            flat = (
+                np.concatenate([p.keys for p in batch])
+                if len(batch) > 1
+                else batch[0].keys
+            )
+            outs = self.engine.sort_segments(flat, lens)
+        except Exception as e:  # one bad batch must not kill its siblings' futures
+            with self._lock:
+                self._failed += len(batch)
+            for p in batch:
+                p.future.set_exception(e)
+            return
+        done = time.monotonic()
+        lats = [done - p.t_enqueue for p in batch]
+        # Account BEFORE resolving: a caller that wakes on the last future
+        # and immediately reads metrics() must see these requests counted.
+        with self._lock:
+            self._flushes[reason] += 1
+            self._completed += len(batch)
+            self._all_lat_s.extend(lats)
+            b = self._bucket_stats(f"{dtype_str}/{bucket}")
+            b.requests += len(batch)
+            b.batches += 1
+            b.rows += len(batch)
+            b.valid_cells += int(sum(lens))
+            b.pad_cells += len(batch) * bucket - int(sum(lens))
+            b.lat_s.extend(lats)
+        for p, out in zip(batch, outs):
+            p.future.set_result(out)
+
+    def _serve_direct(self, item: _Pending) -> None:
+        try:
+            out = self.engine.sort(item.keys)
+        except Exception as e:
+            with self._lock:
+                self._failed += 1
+            item.future.set_exception(e)
+            return
+        lat = time.monotonic() - item.t_enqueue
+        with self._lock:  # account before resolving (see _flush)
+            self._oversize_direct += 1
+            self._completed += 1
+            self._all_lat_s.append(lat)
+            b = self._bucket_stats(f"{item.keys.dtype}/direct")
+            b.requests += 1
+            b.batches += 1
+            b.rows += 1
+            b.valid_cells += item.keys.size
+            b.lat_s.append(lat)
+        item.future.set_result(out)
+
+    def _bucket_stats(self, key: str) -> _BucketStats:
+        b = self._buckets.get(key)
+        if b is None:
+            b = self._buckets[key] = _BucketStats(self.config.latency_window)
+        return b

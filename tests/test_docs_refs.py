@@ -19,5 +19,17 @@ def test_design_references_resolve():
 
 
 def test_core_docs_exist():
-    for name in ("DESIGN.md", "README.md", "benchmarks/README.md"):
+    for name in (
+        "DESIGN.md",
+        "README.md",
+        "benchmarks/README.md",
+        "docs/GLOSSARY.md",
+    ):
         assert (ROOT / name).exists(), name
+
+
+def test_glossary_defines_the_paper_terms():
+    text = (ROOT / "docs" / "GLOSSARY.md").read_text()
+    for term in ("d_h", "Group", "Optical vs electronic hop",
+                 "Array Division Procedure", "Pad waste"):
+        assert term in text, term

@@ -272,3 +272,163 @@ def test_serve_order_by_length_uses_engine_cache():
     from repro.serve.engine import SortEngine as _SE  # re-exported dependency
 
     assert _SE is SortEngine
+
+
+# ------------------------------------------------------ segmented batches
+def test_sort_segments_mixed_lengths_exact():
+    eng = SortEngine(TOPO)
+    lens = [300, 900, 1024, 77, 0, 1, 2000]
+    arrs = [make_array("random", n, seed=n + 1) for n in lens]
+    outs = eng.sort_segments(np.concatenate(arrs), lens)
+    assert len(outs) == len(arrs)
+    for a, o in zip(arrs, outs):
+        np.testing.assert_array_equal(o, np.sort(a))
+    rep = eng.last_report
+    assert rep["batch"] == len(arrs)
+    assert rep["overflow_retries"] == 0
+    assert rep["pad_cells"] == len(arrs) * 2048 - sum(lens)
+    assert rep["batch_padded"] == 8  # batch axis bucketed to the next pow2
+
+
+def test_sort_segments_every_distribution_rows():
+    eng = SortEngine(TOPO)
+    xs = [make_array(d, 2000, seed=5) for d in ALL_DISTRIBUTIONS]
+    outs = eng.sort_segments(
+        np.concatenate(xs), [a.size for a in xs]
+    )
+    for a, o in zip(xs, outs):
+        np.testing.assert_array_equal(o, np.sort(a))
+    assert eng.last_report["overflow_retries"] == 0
+
+
+def test_sort_segments_one_executable_across_batch_and_length_mixes():
+    """Both traced axes are bucketed: every (B ≤ 8, len ≤ 1024) mix must
+    share one compiled executable."""
+    eng = SortEngine(TOPO)
+    for B, n in ((3, 1000), (5, 700), (8, 1024), (2, 517), (7, 800)):
+        xs = [make_array("random", n, seed=B * 10 + i) for i in range(B)]
+        outs = eng.sort_many(xs)
+        for a, o in zip(xs, outs):
+            np.testing.assert_array_equal(o, np.sort(a))
+    assert eng.trace_count == 1
+
+
+def test_sort_segments_return_padded_stays_on_device():
+    import jax
+
+    eng = SortEngine(TOPO)
+    xs = [make_array("random", n, seed=n) for n in (300, 900, 1024, 77)]
+    lens = [a.size for a in xs]
+    out = eng.sort_segments(np.concatenate(xs), lens, return_padded=True)
+    assert isinstance(out, jax.Array)
+    assert out.shape == (4, 1024)  # batch axis sliced back to B
+    host = np.asarray(out)
+    for i, (a, n) in enumerate(zip(xs, lens)):
+        np.testing.assert_array_equal(host[i, :n], np.sort(a))
+
+
+def test_sort_segments_sentinel_valued_keys_survive_padding():
+    """Keys equal to the dtype max must not be confused with pad cells."""
+    eng = SortEngine(TOPO)
+    hi = np.iinfo(np.int32).max
+    a = np.array([hi, 5, hi, 1, hi], np.int32)
+    b = np.array([hi, hi], np.int32)
+    outs = eng.sort_segments(np.concatenate([a, b]), [a.size, b.size])
+    np.testing.assert_array_equal(outs[0], np.sort(a))
+    np.testing.assert_array_equal(outs[1], np.sort(b))
+
+
+def test_sort_segments_length_mismatch_raises():
+    eng = SortEngine(TOPO)
+    with pytest.raises(ValueError, match="seg_lens"):
+        eng.sort_segments(np.arange(10, dtype=np.int32), [4, 4])
+    with pytest.raises(ValueError, match="negative"):
+        eng.sort_segments(np.arange(10, dtype=np.int32), [12, -2])
+
+
+def test_sort_segments_64bit_without_x64_host_fallback():
+    from repro.core import x64_enabled
+
+    if x64_enabled():  # pragma: no cover - container default is x64 off
+        pytest.skip("x64 enabled: the jit path is exact for 64-bit keys")
+    eng = SortEngine(TOPO)
+    rng = np.random.default_rng(2)
+    xs = [
+        (np.int64(1) << 40) + rng.integers(0, 1 << 35, 500, dtype=np.int64)
+        for _ in range(3)
+    ]
+    outs = eng.sort_segments(np.concatenate(xs), [a.size for a in xs])
+    for a, o in zip(xs, outs):
+        assert o.dtype == np.int64
+        np.testing.assert_array_equal(o, np.sort(a))
+    assert eng.last_report["plan"].path == "host"
+    with pytest.raises(ValueError, match="return_padded"):
+        eng.sort_segments(xs[0], [xs[0].size], return_padded=True)
+
+
+def test_batch_plan_policy_bitonic_vs_bucket():
+    from repro.core import SEGMENT_BITONIC_MAX, choose_batch_plan
+
+    # serving-size rows → direct bitonic rows, no capacity, no stats needed
+    p = choose_batch_plan(None, 36, 2048)
+    assert (p.method, p.capacity) == ("bitonic", None)
+    assert choose_batch_plan(None, 36, SEGMENT_BITONIC_MAX).method == "bitonic"
+    # big rows → the bucket machinery with worst-row capacity
+    big = SEGMENT_BITONIC_MAX * 2
+    p = choose_batch_plan(mk_stats(skew=18.0), 36, big)
+    assert p.method == "sampled"  # skewed, not duplicate-dominated
+    assert p.capacity is not None
+    # duplicate-dominated worst row → paper rule, capacity sized to its f̂
+    p = choose_batch_plan(
+        mk_stats(f_max_paper=0.5, skew=18.0, dup_top_frac=0.5), 36, big
+    )
+    assert p.method == "paper"
+    assert p.capacity is not None and p.capacity >= 0.5 * big
+    with pytest.raises(ValueError, match="stats"):
+        choose_batch_plan(None, 36, big)
+
+
+def test_estimate_batch_stats_worst_row_scaled():
+    from repro.core import estimate_batch_stats, pack_segments
+
+    # one constant (degenerate) row among uniform rows, all full length
+    rows = [make_array("random", 1024, seed=s) for s in range(3)]
+    rows.append(np.full(1024, 7, np.int32))
+    lens = [r.size for r in rows]
+    padded = pack_segments(np.concatenate(rows), lens, 1024)
+    s = estimate_batch_stats(padded, lens, num_buckets=36)
+    assert s.f_max_paper > 0.9  # the constant row dominates the reduction
+    assert s.dup_top_frac > 0.9
+    # the same pathological row at 1/16 the batch row length barely registers
+    rows2 = rows[:3] + [np.full(64, 7, np.int32)]
+    lens2 = [1024, 1024, 1024, 64]
+    padded2 = pack_segments(np.concatenate(rows2), lens2, 1024)
+    s2 = estimate_batch_stats(padded2, lens2, num_buckets=36)
+    assert s2.f_max_paper < 0.2
+    # zero-length rows are masked out entirely
+    padded3 = pack_segments(rows[0], [1024, 0], 1024)
+    s3 = estimate_batch_stats(padded3, [1024, 0], num_buckets=36)
+    assert s3.dup_top_frac < 0.5
+
+
+def test_pack_unpack_segments_roundtrip_and_errors():
+    from repro.core import pack_segments, unpack_segments
+
+    arrs = [np.arange(5, dtype=np.int32), np.zeros(0, np.int32),
+            np.arange(8, dtype=np.int32)]
+    lens = [a.size for a in arrs]
+    packed = pack_segments(np.concatenate(arrs), lens, 8)
+    assert packed.shape == (3, 8)
+    for a, o in zip(arrs, unpack_segments(packed, lens)):
+        np.testing.assert_array_equal(o, a)
+    # left pad fill sorts to the end (dtype max default)
+    assert packed[0, 5] == np.iinfo(np.int32).max
+    # right alignment puts content at the row end (serving left-pad layout)
+    right = pack_segments(np.concatenate(arrs), lens, 8, fill_value=0,
+                          align="right")
+    np.testing.assert_array_equal(right[0, 3:], arrs[0])
+    assert right[0, 0] == 0
+    with pytest.raises(ValueError, match="row_len"):
+        pack_segments(np.arange(9, dtype=np.int32), [9], 8)
+    with pytest.raises(ValueError, match="sum"):
+        pack_segments(np.arange(9, dtype=np.int32), [4, 4], 8)

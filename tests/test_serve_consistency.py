@@ -97,3 +97,5 @@ def test_serving_engine_end_to_end():
     out = eng.generate(reqs)
     assert set(out) == {0, 1, 2, 3}
     assert all(len(v) == 8 for v in out.values())
+    # regression: empty batch returns empty result, not max()-of-empty
+    assert eng.generate([]) == {}

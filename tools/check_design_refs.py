@@ -1,14 +1,27 @@
 #!/usr/bin/env python
-"""Docs contract check: every ``DESIGN.md §n`` reference must resolve.
+"""Docs contract check (stdlib-only — CI's no-deps docs lane runs it).
 
-Scans ``src/``, ``tests/``, ``benchmarks/``, ``examples/``, and ``tools/``
-for ``DESIGN.md §<n>`` citations and verifies a ``§<n>`` section heading
-exists in ``DESIGN.md``.  Exits non-zero listing any dangling references
-(CI runs this; ``tests/test_docs_refs.py`` runs it under pytest too).
+Three checks, all exiting non-zero with a listing on failure:
+
+1. **Section references**: every ``DESIGN.md §n`` citation under ``src/``,
+   ``tests/``, ``benchmarks/``, ``examples/``, and ``tools/`` must resolve
+   to a ``§<n>`` heading in ``DESIGN.md``.
+2. **Symbol coverage**: DESIGN.md §8 (the serving layer) must mention
+   every public symbol it owns — the ``__all__`` of ``repro.serve.sortd``
+   (parsed with ``ast``, so new exports automatically demand coverage)
+   plus the segmented-batch engine/partition API.
+3. **Intra-repo markdown links**: every relative ``[text](target)`` link
+   in the top-level docs, ``docs/``, and ``benchmarks/README.md`` must
+   point at an existing file (external ``http(s)``/``mailto`` links and
+   pure ``#anchor`` links are skipped; ``#fragment`` suffixes are stripped
+   before the existence check).
+
+``tests/test_docs_refs.py`` runs the same script under pytest.
 """
 
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
@@ -17,6 +30,32 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
 HEADING_RE = re.compile(r"^#+\s*§(\d+)\b", re.MULTILINE)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# Markdown files whose intra-repo links the docs contract covers.
+MD_FILES = (
+    "README.md",
+    "DESIGN.md",
+    "PAPER.md",
+    "ROADMAP.md",
+    "benchmarks/README.md",
+)
+MD_GLOBS = ("docs/*.md",)
+
+# §8 owns the serving layer: sortd's whole public surface (from __all__,
+# so a new export without documentation fails this check) plus the
+# segmented-batch engine/partition additions.
+SECTION8_EXTRA_SYMBOLS = (
+    "sort_segments",
+    "sort_many",
+    "plan_segments",
+    "estimate_batch_stats",
+    "choose_batch_plan",
+    "SEGMENT_BITONIC_MAX",
+    "pack_segments",
+    "unpack_segments",
+)
+SORTD_MODULE = "src/repro/serve/sortd.py"
 
 
 def defined_sections() -> set[int]:
@@ -41,6 +80,77 @@ def find_references() -> list[tuple[str, int, int]]:
     return refs
 
 
+def module_all(py_path: pathlib.Path) -> list[str]:
+    """``__all__`` of a module via ast — no import, no dependencies."""
+    tree = ast.parse(py_path.read_text())
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in node.targets
+        ):
+            return list(ast.literal_eval(node.value))
+    return []
+
+
+def section_text(number: int) -> str:
+    """Body of DESIGN.md section §<number> (heading to next § heading)."""
+    text = (ROOT / "DESIGN.md").read_text()
+    starts = [
+        (int(m.group(1)), m.start())
+        for m in re.finditer(r"^#+\s*§(\d+)\b", text, re.MULTILINE)
+    ]
+    for i, (num, start) in enumerate(starts):
+        if num == number:
+            end = starts[i + 1][1] if i + 1 < len(starts) else len(text)
+            return text[start:end]
+    return ""
+
+
+def check_symbol_coverage() -> list[str]:
+    problems = []
+    sortd = ROOT / SORTD_MODULE
+    if not sortd.exists():
+        return [f"symbol coverage: {SORTD_MODULE} missing"]
+    symbols = tuple(module_all(sortd)) + SECTION8_EXTRA_SYMBOLS
+    if not module_all(sortd):
+        problems.append(f"symbol coverage: {SORTD_MODULE} has no __all__")
+    body = section_text(8)
+    if not body:
+        return problems + ["symbol coverage: DESIGN.md has no §8 section"]
+    for sym in symbols:
+        if not re.search(rf"\b{re.escape(sym)}\b", body):
+            problems.append(
+                f"UNDOCUMENTED: DESIGN.md §8 does not mention `{sym}` "
+                f"(public serving-layer symbol)"
+            )
+    return problems
+
+
+def md_files() -> list[pathlib.Path]:
+    out = [ROOT / f for f in MD_FILES if (ROOT / f).exists()]
+    for g in MD_GLOBS:
+        out.extend(sorted(ROOT.glob(g)))
+    return out
+
+
+def check_markdown_links() -> list[str]:
+    problems = []
+    for md in md_files():
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not (md.parent / rel).exists():
+                    problems.append(
+                        f"BROKEN LINK: {md.relative_to(ROOT)}:{lineno} → "
+                        f"{target} (no such file)"
+                    )
+    return problems
+
+
 def main() -> int:
     sections = defined_sections()
     refs = find_references()
@@ -48,17 +158,25 @@ def main() -> int:
     if not sections:
         print("check_design_refs: DESIGN.md missing or has no § headings")
         return 1
+    problems = []
     if dangling:
         for p, ln, s in dangling:
-            print(f"DANGLING: {p}:{ln} cites DESIGN.md §{s} (not defined)")
+            problems.append(f"DANGLING: {p}:{ln} cites DESIGN.md §{s} (not defined)")
+    problems += check_symbol_coverage()
+    problems += check_markdown_links()
+    if problems:
+        for p in problems:
+            print(p)
         print(
-            f"check_design_refs: {len(dangling)} dangling of {len(refs)} refs; "
-            f"defined sections: {sorted(sections)}"
+            f"check_design_refs: {len(problems)} problems "
+            f"({len(dangling)} dangling of {len(refs)} refs; "
+            f"defined sections: {sorted(sections)})"
         )
         return 1
     print(
-        f"check_design_refs: OK — {len(refs)} references, "
-        f"all resolve to sections {sorted(sections)}"
+        f"check_design_refs: OK — {len(refs)} § references resolve to sections "
+        f"{sorted(sections)}, §8 covers the serving-layer symbols, "
+        f"{len(md_files())} markdown files link-checked"
     )
     return 0
 

@@ -43,6 +43,9 @@ def parse_args(argv=None):
     mode.add_argument("--smoke", action="store_true", help="pruned CI grid (default)")
     mode.add_argument("--full", action="store_true", help="the whole paper grid")
     mode.add_argument("--tier1", action="store_true", help="the fast pytest subset")
+    mode.add_argument("--sortd", action="store_true",
+                      help="sortd serving-layer smoke slice (DESIGN.md §8): "
+                      "live micro-batching service vs the np.sort oracle")
     ap.add_argument("--devices", type=int, default=1,
                     help="XLA host device count (>1 unlocks dist scenarios)")
     ap.add_argument("--filter", default=None,
@@ -59,8 +62,101 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
+def run_sortd_slice(args) -> int:
+    """Serving-layer smoke: a live sortd instance must agree with np.sort.
+
+    Submits a (dtype × distribution × size) request grid — including
+    oversize requests beyond the largest coalescible bucket — from two
+    concurrent client threads, checks every result against the oracle, and
+    sanity-checks the service's own accounting (completion count, flush
+    reasons, per-bucket latency/pad-waste invariants).
+    """
+    import threading
+    import numpy as np
+
+    from repro.core import SortEngine
+    from repro.data.distributions import make_array
+    from repro.serve.sortd import Sortd, SortdConfig
+
+    cfg = SortdConfig(max_batch=32, max_wait_s=0.005, max_bucket=1 << 12)
+    eng = SortEngine()
+    cases = []
+    seed = 0
+    for dtype in ("int32", "int16", "uint32", "float32"):
+        for dist in ("random", "sorted", "dupes", "local"):
+            for n in (37, 513, 2048):
+                seed += 1
+                cases.append(
+                    (f"{dtype}/{dist}/{n}",
+                     make_array(dist, n, seed=seed, dtype=np.dtype(dtype)))
+                )
+    # oversize → the direct per-array engine path
+    cases.append(("int32/random/oversize",
+                  make_array("random", (1 << 12) + 777, seed=99)))
+
+    t0 = time.perf_counter()
+    fails = []
+    with Sortd(eng, cfg) as sd:
+        futs = [None] * len(cases)
+
+        def submit_range(lo, hi):
+            for i in range(lo, hi):
+                futs[i] = sd.submit(cases[i][1])
+
+        mid = len(cases) // 2
+        threads = [
+            threading.Thread(target=submit_range, args=(0, mid)),
+            threading.Thread(target=submit_range, args=(mid, len(cases))),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for (name, x), fut in zip(cases, futs):
+            try:
+                out = fut.result(timeout=120)
+            except Exception as e:  # noqa: BLE001 - report, don't crash the slice
+                fails.append((name, f"raised {e!r}"))
+                continue
+            if not np.array_equal(out, np.sort(x)):
+                fails.append((name, "result != np.sort oracle"))
+        m = sd.metrics()
+
+    if m["completed"] != len(cases):
+        fails.append(("metrics", f"completed {m['completed']} != {len(cases)}"))
+    if m["oversize_direct"] < 1:
+        fails.append(("metrics", "oversize request did not take the direct path"))
+    if sum(m["flushes"].values()) < 1:
+        fails.append(("metrics", "no flush recorded"))
+    for bucket, b in m["buckets"].items():
+        if not (0.0 <= b["pad_waste"] < 1.0):
+            fails.append((f"bucket {bucket}", f"pad_waste {b['pad_waste']}"))
+        if b["p99_ms"] + 1e-9 < b["p50_ms"]:
+            fails.append((f"bucket {bucket}", "p99 < p50"))
+    elapsed = time.perf_counter() - t0
+    if args.report:
+        pathlib.Path(args.report).write_text(json.dumps({
+            "mode": "sortd",
+            "elapsed_s": elapsed,
+            "cases": len(cases),
+            "fails": [list(f) for f in fails],
+            "metrics": m,
+        }, indent=1) + "\n")
+    print(
+        f"verify[sortd]: {len(cases) - len(fails)}/{len(cases)} requests pass, "
+        f"{len(m['buckets'])} shape buckets, flushes={m['flushes']}, "
+        f"p50={m['latency_ms']['p50']:.1f}ms p99={m['latency_ms']['p99']:.1f}ms, "
+        f"{elapsed:.1f}s"
+    )
+    for name, detail in fails:
+        print(f"FAIL {name}: {detail}")
+    return 1 if fails else 0
+
+
 def main(argv=None) -> int:
     args = parse_args(argv)
+    if args.sortd:
+        return run_sortd_slice(args)
     if args.devices > 1:
         flag = f"--xla_force_host_platform_device_count={args.devices}"
         os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
