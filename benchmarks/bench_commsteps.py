@@ -10,7 +10,7 @@ mode's round count exposes the half variant's one-round slack)."""
 
 from __future__ import annotations
 
-from benchmarks.common import DIMS, emit
+from benchmarks.common import dims, emit, smoke_scaled
 from repro.core import OHHCTopology
 from repro.core.sample_sort import compare_schedules
 from repro.core.schedule import AccumulationSchedule
@@ -20,9 +20,9 @@ from repro.net.sim import simulate_gather
 
 def run(paper: bool = False) -> dict:
     out = {}
-    n_total = 2_621_440
+    n_total = smoke_scaled(2_621_440)
     for variant in ("full", "half"):
-        for d_h in DIMS:
+        for d_h in dims():
             topo = OHHCTopology(d_h, variant)
             s = AccumulationSchedule.build(topo)
             cmp = compare_schedules(topo, n_total=n_total)

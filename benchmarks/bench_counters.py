@@ -11,17 +11,17 @@ paper's 30MB=7.9M with --paper)."""
 
 from __future__ import annotations
 
-from benchmarks.common import DIMS, emit
+from benchmarks.common import dims, emit, smoke_scaled
 from repro.core import OHHCTopology, bitonic_counters, parallel_quicksort_counters
 from repro.data.distributions import make_array
 
 
 def run(paper: bool = False) -> dict:
-    n = 7_864_320 if paper else 1_000_000
+    n = smoke_scaled(7_864_320 if paper else 1_000_000)
     out = {}
     for dist in ("random", "sorted"):
         x = make_array(dist, n, seed=30).astype("int64")
-        for d_h in DIMS:
+        for d_h in dims():
             topo = OHHCTopology(d_h, "full")
             c = parallel_quicksort_counters(x, topo)
             out[(dist, d_h)] = c
@@ -33,7 +33,7 @@ def run(paper: bool = False) -> dict:
             )
     # TPU-native local sort (bitonic network) closed-form comparisons for the
     # same bucket sizes — the hardware-adaptation counterpart of Fig 6.23.
-    for d_h in DIMS:
+    for d_h in dims():
         topo = OHHCTopology(d_h, "full")
         bc = bitonic_counters(n // topo.total_procs)
         emit(

@@ -12,15 +12,25 @@ For every input class (the paper's four + duplicate-heavy) and size, times
 The acceptance bar: ``auto`` within 10% of the best fixed method on every
 scenario (it should usually *be* the best fixed method, minus the guessing).
 Derived CSV fields carry ``ratio_vs_best_fixed`` per scenario.
+
+Timing: configs are measured round-robin via ``measure_interleaved``
+(warm-up drift hits every config equally) and the reported value is the
+median of ``ROUNDS`` with the IQR in the derived field — the shared
+measurement contract (DESIGN.md §9).
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import DEFAULT_DTYPE, emit, n_for_mb, resolve_dtype, sizes_mb
+from benchmarks.common import (
+    DEFAULT_DTYPE,
+    emit,
+    measure_interleaved,
+    n_for_mb,
+    resolve_dtype,
+    sizes_mb,
+)
 from repro.core import OHHCTopology, SortEngine, SortPlan, default_capacity, x64_enabled
 from repro.data.distributions import ALL_DISTRIBUTIONS, make_array
 from repro.kernels import ops
@@ -63,20 +73,25 @@ def run(paper: bool = False, dtype: str = DEFAULT_DTYPE) -> dict:
                 retries[name] = eng.last_report["overflow_retries"]
                 if fp is None:
                     plan = eng.last_report["plan"]
-            # interleaved rounds, min per config: immune to allocator/cache
-            # warm-up drift that would bias whichever config is timed first
-            times = {name: float("inf") for name in configs}
-            for _ in range(ROUNDS):
-                for name, fp in configs.items():
-                    t0 = time.perf_counter()
-                    eng.sort(x) if fp is None else eng.sort(x, plan=fp)
-                    times[name] = min(times[name], time.perf_counter() - t0)
+            # interleaved rounds (already warmed above): drift hits every
+            # config equally instead of whichever was timed first
+            meas = measure_interleaved(
+                {
+                    name: (lambda fp=fp: eng.sort(x) if fp is None
+                           else eng.sort(x, plan=fp))
+                    for name, fp in configs.items()
+                },
+                warmup=0,
+                repeats=ROUNDS,
+            )
+            times = {name: m.median_s for name, m in meas.items()}
 
             for m in FIXED_METHODS:
                 emit(
                     f"engine/fixed-{m}/{dist}/{mb}MB{tag}",
                     times[m] * 1e6,
-                    f"path={configs[m].path};retries={retries[m]}",
+                    f"path={configs[m].path};retries={retries[m]};"
+                    f"iqr_us={meas[m].iqr_s * 1e6:.1f}",
                 )
             best = min(times[m] for m in FIXED_METHODS)
             ratio = times["auto"] / best if best > 0 else 1.0
@@ -85,7 +100,8 @@ def run(paper: bool = False, dtype: str = DEFAULT_DTYPE) -> dict:
                 f"engine/auto/{dist}/{mb}MB{tag}",
                 times["auto"] * 1e6,
                 f"path={plan.path};method={plan.method};"
-                f"ratio_vs_best_fixed={ratio:.2f}",
+                f"ratio_vs_best_fixed={ratio:.2f};"
+                f"iqr_us={meas['auto'].iqr_s * 1e6:.1f}",
             )
     return out
 

@@ -9,13 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_call
 from repro.data.distributions import make_array
 from repro.kernels import ops, ref
 
 
 def run(paper: bool = False) -> None:
-    for n in (4096, 65536):
+    for n in (4096,) if common.SMOKE else (4096, 65536):
         x = jnp.asarray(make_array("random", n, seed=n))
         sort_ref = jax.jit(jnp.sort)
         t_ref = time_call(lambda: sort_ref(x).block_until_ready())
@@ -23,14 +24,15 @@ def run(paper: bool = False) -> None:
         t_k = time_call(lambda: ops.local_sort(x).block_until_ready())
         emit(f"kernels/bitonic_interpret/{n}", t_k * 1e6, "pallas-interpret")
 
-    ids = jnp.asarray(make_array("random", 65536, seed=1) % 64, jnp.int32)
+    m = common.smoke_scaled(65536)
+    ids = jnp.asarray(make_array("random", m, seed=1) % 64, jnp.int32)
     t_ref = time_call(
         lambda: jax.jit(ref.ref_bucket_count_rank, static_argnums=1)(ids, 64)[0]
         .block_until_ready()
     )
-    emit("kernels/count_rank_ref/65536x64", t_ref * 1e6, "jnp")
+    emit(f"kernels/count_rank_ref/{m}x64", t_ref * 1e6, "jnp")
     t_k = time_call(lambda: ops.bucket_count_rank(ids, 64)[0].block_until_ready())
-    emit("kernels/count_rank_pallas/65536x64", t_k * 1e6, "pallas-interpret")
+    emit(f"kernels/count_rank_pallas/{m}x64", t_k * 1e6, "pallas-interpret")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_call
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models import moe as MOE
@@ -13,7 +14,8 @@ from repro.models.common import NO_SHARD
 
 
 def run(paper: bool = False) -> None:
-    for E, k, T in ((8, 2, 4096), (64, 6, 4096)):
+    grid = ((8, 2, 512),) if common.SMOKE else ((8, 2, 4096), (64, 6, 4096))
+    for E, k, T in grid:
         cfg = ModelConfig(
             family="moe", d_model=256, dtype=jnp.bfloat16,
             moe=MoEConfig(num_experts=E, num_experts_per_tok=k, expert_d_ff=512,

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import sys
 
+from benchmarks import common
 from benchmarks.common import DIMS, emit
 from repro.net.report import netsim_report, write_json
 
@@ -23,9 +24,12 @@ from repro.net.report import netsim_report, write_json
 def run(paper: bool = False, json_path: "str | None" = None) -> dict:
     # d_h=4 (2304-node full OHHC) only on --paper: all-pairs BFS for the
     # diameter check dominates and the 1–3 rows already span the scaling.
-    dims = tuple(d for d in DIMS if paper or d <= 3)
-    chunk_elems = 16384 if paper else 1024
-    report = netsim_report(dims=dims, chunk_elems=chunk_elems)
+    if common.SMOKE:
+        sweep, chunk_elems = (1,), 256
+    else:
+        sweep = tuple(d for d in DIMS if paper or d <= 3)
+        chunk_elems = 16384 if paper else 1024
+    report = netsim_report(dims=sweep, chunk_elems=chunk_elems)
     for c in report["cases"]:
         f = c["fault"]
         emit(

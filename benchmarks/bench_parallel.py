@@ -9,14 +9,14 @@ explicitly could NOT simulate)."""
 
 from __future__ import annotations
 
-from benchmarks.common import DIMS, emit, n_for_mb, sizes_mb
+from benchmarks.common import dims, emit, n_for_mb, sizes_mb
 from repro.core import OHHCTopology, ohhc_sort_host
 from repro.data.distributions import DISTRIBUTIONS, make_array
 
 
 def run(paper: bool = False, variant: str = "full", method: str = "paper") -> dict:
     out = {}
-    for d_h in DIMS:
+    for d_h in dims():
         topo = OHHCTopology(d_h, variant)
         for dist in DISTRIBUTIONS:
             for mb in sizes_mb(paper):

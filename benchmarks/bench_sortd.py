@@ -37,11 +37,19 @@ import time
 
 import numpy as np
 
-from benchmarks.common import DEFAULT_DTYPE, emit, resolve_dtype
+from benchmarks import common
+from benchmarks.common import (
+    DEFAULT_DTYPE,
+    bench_rng,
+    emit,
+    measure_interleaved,
+    resolve_dtype,
+)
 from repro.core import OHHCTopology, SortEngine
 from repro.serve.sortd import Sortd, SortdConfig
 
 LOOP_BATCH_SIZES = (16, 64, 256)
+SMOKE_BATCH_SIZES = (16,)
 PAPER_BATCH_SIZES = (64, 256, 1024)
 LEN_RANGE = (256, 2048)  # per-request key counts for the throughput gate
 ROUNDS = 3
@@ -52,11 +60,17 @@ def _make_batch(rng, B, dtype, lo=LEN_RANGE[0], hi=LEN_RANGE[1]):
     return [rng.integers(0, 1 << 30, n).astype(dtype) for n in lens]
 
 
+def _batch_sizes(paper: bool):
+    if common.SMOKE:
+        return SMOKE_BATCH_SIZES
+    return PAPER_BATCH_SIZES if paper else LOOP_BATCH_SIZES
+
+
 def _bench_segmented_vs_loop(paper: bool, dtype, report: dict) -> None:
     eng = SortEngine(OHHCTopology(1, "full"))
-    rng = np.random.default_rng(7)
+    rng = bench_rng(7)
     rows = {}
-    for B in PAPER_BATCH_SIZES if paper else LOOP_BATCH_SIZES:
+    for B in _batch_sizes(paper):
         arrs = _make_batch(rng, B, dtype)
         lens = [a.size for a in arrs]
         flat = np.concatenate(arrs)
@@ -68,27 +82,31 @@ def _bench_segmented_vs_loop(paper: bool, dtype, report: dict) -> None:
         ):
             for g, e in zip(got, expect):
                 np.testing.assert_array_equal(g, e)
-        t_loop = t_seg = float("inf")
-        for _ in range(ROUNDS):  # interleaved, min-of-rounds
-            t0 = time.perf_counter()
-            for a in arrs:
-                eng.sort(a)
-            t_loop = min(t_loop, time.perf_counter() - t0)
-            t0 = time.perf_counter()
-            eng.sort_segments(flat, lens)
-            t_seg = min(t_seg, time.perf_counter() - t0)
+        # interleaved rounds (warmed above), median-of-ROUNDS with IQR —
+        # the shared measurement contract (DESIGN.md §9)
+        meas = measure_interleaved(
+            {
+                "loop": lambda: [eng.sort(a) for a in arrs],
+                "segmented": lambda: eng.sort_segments(flat, lens),
+            },
+            warmup=0,
+            repeats=ROUNDS,
+        )
+        t_loop, t_seg = meas["loop"].median_s, meas["segmented"].median_s
         ratio = t_loop / t_seg if t_seg > 0 else float("inf")
         rows[f"B{B}"] = {
             "batch": B,
             "loop_s": t_loop,
             "segmented_s": t_seg,
+            "segmented_iqr_s": meas["segmented"].iqr_s,
             "ratio_vs_loop": ratio,
             "keys": int(flat.size),
         }
         emit(
             f"sortd/segmented/B{B}",
             t_seg * 1e6,
-            f"ratio_vs_loop={ratio:.2f};loop_us={t_loop*1e6:.0f}",
+            f"ratio_vs_loop={ratio:.2f};loop_us={t_loop*1e6:.0f};"
+            f"iqr_us={meas['segmented'].iqr_s * 1e6:.0f}",
         )
     report["throughput"] = rows
 
@@ -127,11 +145,11 @@ def _request_stream(rng, n_req, dtype, max_bucket):
 def _bench_service(paper: bool, dtype, arrival: str, rate: float,
                    clients: int, report: dict) -> None:
     cfg = SortdConfig(max_batch=64, max_wait_s=0.005, max_bucket=1 << 12)
-    n_req = 600 if paper else 200
+    n_req = 600 if paper else (40 if common.SMOKE else 200)
     modes = ("open", "closed") if arrival == "both" else (arrival,)
     for mode in modes:
         eng = SortEngine(OHHCTopology(1, "full"))
-        rng = np.random.default_rng(11)
+        rng = bench_rng(11)
         reqs = list(_request_stream(rng, n_req, dtype, cfg.max_bucket))
         # Warm the per-bucket executables on a throwaway service instance:
         # the engine's jit cache is shared, the measured instance's metrics

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DIMS, emit, n_for_mb, sizes_mb, time_call
+from benchmarks.common import dims, emit, n_for_mb, sizes_mb, time_call
 from repro.core import OHHCTopology, ohhc_sort_host
 from repro.data.distributions import DISTRIBUTIONS, make_array
 
@@ -21,7 +21,7 @@ def run(paper: bool = False, variant: str = "full") -> dict:
             n = n_for_mb(mb)
             x = make_array(dist, n, seed=mb)
             t_seq = time_call(lambda: np.sort(x, kind="quicksort"), repeats=3)
-            for d_h in DIMS:
+            for d_h in dims():
                 topo = OHHCTopology(d_h, variant)
                 for method in ("paper", "sampled"):
                     r = ohhc_sort_host(x, topo, method=method)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.verify import differential, grid
 
@@ -19,6 +20,8 @@ def run(paper: bool = False, dtype: str | None = None) -> dict:
     """``dtype=None`` sweeps every key type; an explicit dtype (run.py's
     ``--dtype``) narrows the grid to that one so rows stay comparable."""
     scenarios = grid.smoke_grid(devices=1) if paper else grid.tier1_grid()
+    if dtype is None and common.SMOKE:
+        dtype = "int32"  # one key type is enough to validate wiring
     if dtype is not None:
         scenarios = [sc for sc in scenarios if sc.dtype == dtype]
     # Warm-up pass on shared engines, then time: the first execution of

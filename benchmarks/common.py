@@ -1,27 +1,58 @@
-"""Shared benchmark plumbing: timing, CSV output, size/distribution grids.
+"""Shared benchmark plumbing: timing discipline, CSV output, size grids.
 
 Paper sizes are 10–60 MB of int32 (2.62M–15.7M elements).  The default
 grid is scaled down (see ``--paper`` in run.py) because this container has
-ONE CPU core — full-size runs are supported but slow.  Every benchmark
-prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+ONE CPU core — full-size runs are supported but slow.  ``--smoke``
+(``set_smoke``) shrinks every axis to a wiring-validation slice: sizes cap
+at :data:`SMOKE_MAX_ELEMS`, the dimension sweep narrows, and per-module
+scenario counts drop — numbers from a smoke run validate that the suites
+*run and emit schema-valid rows* (``tests/test_bench_smoke.py``), never
+performance.  Every benchmark prints ``name,us_per_call,derived`` CSV rows
+per the harness contract (validated by ``repro.perf.schema.parse_csv_row``).
+
+Timing goes through the ``repro.perf.measure`` contract (DESIGN.md §9):
+warmup outside the timed region, async results drained before the clock
+stops, median-of-k with IQR.  ``time_call`` keeps the historical
+median-seconds signature on top of it; new code should use ``measure`` /
+``measure_interleaved`` directly so dispersion rides along.  All benchmark
+RNG must come from :func:`bench_rng` (or an explicit ``seed=`` in
+``make_array``) — a benchmark that draws from an unseeded generator can
+never be compared across runs.
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.data.distributions import DISTRIBUTIONS, elements_for_mb
+from repro.perf.measure import (  # noqa: F401  (re-exported bench surface)
+    Measurement,
+    measure,
+    measure_interleaved,
+)
 
 SMALL_SIZES_MB = (1, 2, 4)
 PAPER_SIZES_MB = (10, 20, 30, 40, 50, 60)
 DIMS = (1, 2, 3, 4)
 
+# --smoke slice: one nominal size row, capped element counts, two dims.
+SMOKE_SIZES_MB = (1,)
+SMOKE_MAX_ELEMS = 16_384
+SMOKE_DIMS = (1, 2)
+
 # The paper's "different integer array types" axis (+ float32, §2's native
 # key type).  ``--dtype`` on run.py selects one; int32 is the paper default.
 DTYPES = ("int8", "int16", "int32", "int64", "uint32", "float32")
 DEFAULT_DTYPE = "int32"
+
+# Module state, not an import-time constant: run.py's --smoke flag flips it
+# after imports, so every helper below must consult it at call time.
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = bool(on)
 
 
 def resolve_dtype(name: str) -> np.dtype:
@@ -31,22 +62,37 @@ def resolve_dtype(name: str) -> np.dtype:
 
 
 def sizes_mb(paper: bool):
+    if SMOKE:
+        return SMOKE_SIZES_MB
     return PAPER_SIZES_MB if paper else SMALL_SIZES_MB
 
 
+def dims():
+    """The OHHC dimension sweep (consult at call time — see SMOKE)."""
+    return SMOKE_DIMS if SMOKE else DIMS
+
+
+def n_for_mb(mb: int) -> int:
+    n = elements_for_mb(mb)
+    return min(n, SMOKE_MAX_ELEMS) if SMOKE else n
+
+
+def smoke_scaled(n: int) -> int:
+    """Cap an explicit element count in smoke mode (for the modules whose
+    sizes don't come from the MB grid, e.g. the counter walks)."""
+    return min(n, SMOKE_MAX_ELEMS) if SMOKE else n
+
+
+def bench_rng(seed: int) -> np.random.Generator:
+    """THE benchmark RNG constructor: explicit seed, no ambient state."""
+    return np.random.default_rng(seed)
+
+
 def time_call(fn, *args, repeats: int = 3, **kw) -> float:
-    """Median wall time in seconds."""
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(*args, **kw)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    """Median wall time in seconds (median-of-``repeats`` after 1 warmup,
+    async results drained — the ``repro.perf.measure`` contract)."""
+    return measure(lambda: fn(*args, **kw), warmup=1, repeats=repeats).median_s
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
-
-
-def n_for_mb(mb: int) -> int:
-    return elements_for_mb(mb)

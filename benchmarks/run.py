@@ -1,10 +1,14 @@
 """Benchmark harness — one module per paper table/figure family.
 
-``PYTHONPATH=src python -m benchmarks.run [--paper] [--suite NAME] [--dtype D]``
+``PYTHONPATH=src python -m benchmarks.run [--paper|--smoke] [--suite NAME]
+[--dtype D]``
 
-Prints ``name,us_per_call,derived`` CSV.  ``--paper`` uses the paper's
-exact 10–60 MB sizes (slow on this 1-core container); the default grid is
-1–4 MB with identical structure.  ``--dtype`` selects the key type for the
+Prints ``name,us_per_call,derived`` CSV with a ``# suite=<name>`` marker
+line before each suite's rows.  ``--paper`` uses the paper's exact
+10–60 MB sizes (slow on this 1-core container); the default grid is
+1–4 MB with identical structure; ``--smoke`` shrinks every axis to the
+wiring-validation slice ``tests/test_bench_smoke.py`` gates (numbers not
+comparable to real runs).  ``--dtype`` selects the key type for the
 suites that sweep the paper's "different integer array types" axis
 (``engine``, ``verify``, ``sortd``); the rest pin the paper's int32.  The
 ``sortd`` suite additionally honours ``--arrival/--rate/--clients`` (load
@@ -30,6 +34,7 @@ from benchmarks import (
     bench_speedup,
     bench_verify,
 )
+from benchmarks import common
 from benchmarks.common import DEFAULT_DTYPE, DTYPES
 
 SUITES = {
@@ -63,6 +68,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true", help="paper-exact 10-60MB sizes")
     ap.add_argument(
+        "--smoke", action="store_true",
+        help="wiring-validation slice: capped sizes, narrowed sweeps "
+        "(tests/test_bench_smoke.py runs every suite this way; numbers are "
+        "NOT comparable to real runs)",
+    )
+    ap.add_argument(
         "--only", "--suite", dest="only", default=None, choices=list(SUITES),
         help="run one suite (--suite is an alias)",
     )
@@ -90,10 +101,17 @@ def main() -> None:
         help="sortd JSON report path ('' disables)",
     )
     args = ap.parse_args()
+    if args.smoke and args.paper:
+        ap.error("--smoke and --paper are mutually exclusive")
+    if args.smoke:
+        common.set_smoke(True)
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
+        # section marker (comment row): lets consumers attribute rows to
+        # suites without pattern-matching the heterogeneous row names
+        print(f"# suite={name}")
         fn(args)
 
 

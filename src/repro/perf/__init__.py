@@ -1,0 +1,76 @@
+"""repro.perf — performance-regression subsystem (DESIGN.md §9).
+
+The perf twin of ``repro.verify``: bench suites run under one enforced
+timing discipline (``measure``), results are normalized against this
+machine's calibrated roofline (``normalize``), judged against committed
+``BENCH_<suite>.json`` baselines (``guard``), and gated in CI by
+``tools/perfguard.py``.
+"""
+
+from repro.perf.guard import (
+    CaseVerdict,
+    classify,
+    gate_ok,
+    judge,
+    json_report,
+    markdown_report,
+    summarize,
+)
+from repro.perf.measure import (
+    Measurement,
+    measure,
+    measure_interleaved,
+    median_iqr,
+)
+from repro.perf.normalize import Workload, host_hw, normalize, roofline_s
+from repro.perf.runner import (
+    record_from_measurement,
+    run_case,
+    run_cases,
+    run_suite,
+)
+from repro.perf.schema import (
+    PerfCase,
+    PerfRecord,
+    baseline_path,
+    build_baseline,
+    load_baseline,
+    parse_csv_row,
+    reference_entry,
+    save_baseline,
+    validate_csv,
+)
+from repro.perf.suites import SUITE_NAMES, cases_for
+
+__all__ = [
+    "CaseVerdict",
+    "Measurement",
+    "PerfCase",
+    "PerfRecord",
+    "SUITE_NAMES",
+    "Workload",
+    "baseline_path",
+    "build_baseline",
+    "cases_for",
+    "classify",
+    "gate_ok",
+    "host_hw",
+    "judge",
+    "json_report",
+    "load_baseline",
+    "markdown_report",
+    "measure",
+    "measure_interleaved",
+    "median_iqr",
+    "normalize",
+    "parse_csv_row",
+    "record_from_measurement",
+    "reference_entry",
+    "roofline_s",
+    "run_case",
+    "run_cases",
+    "run_suite",
+    "save_baseline",
+    "summarize",
+    "validate_csv",
+]

@@ -1,0 +1,263 @@
+"""The gated perf scenarios, one registry per bench suite (DESIGN.md §9).
+
+Each entry mirrors an existing ``benchmarks/`` suite — ``engine``,
+``sortd``, ``kernels``, ``netsim``, ``verify`` — but pinned to a small,
+deterministic slice sized for a CI gate: the point is a *stable judged
+number per case*, not figure-quality coverage (that stays in
+``benchmarks/run.py``).  Every case builds its inputs and warms its
+executables inside ``setup`` so the timed call measures steady-state work
+only, and every RNG draw is seeded.
+
+Work models (``Workload``) are honest lower bounds — inputs read once,
+outputs written once, ``n·log2(n)`` comparison "flops" for a sort — so
+``pct_of_roofline`` is comparable across cases and the normalized ratio is
+portable across hosts (see ``repro.perf.normalize``).  The netsim suite
+has no bytes-moved model (its cost is simulator events), so it opts out
+and is judged on raw seconds, machine-local by declaration.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.perf.normalize import Workload
+from repro.perf.schema import PerfCase
+
+SUITE_NAMES = ("engine", "sortd", "kernels", "netsim", "verify")
+
+
+def _sort_workload(n: int, itemsize: int) -> Workload:
+    return Workload(
+        bytes_moved=2.0 * n * itemsize,
+        flops=float(n) * math.log2(max(n, 2)),
+    )
+
+
+# --- engine ---------------------------------------------------------------
+
+
+def _engine_setup(dist: str, n: int, dtype: str):
+    def setup():
+        from repro.core import SortEngine
+        from repro.data.distributions import make_array
+
+        eng = SortEngine()
+        x = make_array(dist, n, seed=n, dtype=np.dtype(dtype))
+        return lambda: eng.sort(x)
+
+    return setup
+
+
+def engine_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    cells = [("random", 65536, "int32", True), ("dupes", 65536, "int32", True)]
+    if not smoke:
+        cells += [
+            ("random", 262144, "int32", False),
+            ("local", 65536, "int32", False),
+            ("random", 65536, "uint32", False),
+        ]
+    return [
+        PerfCase(
+            suite="engine",
+            key=f"sort/{dist}/{n}/{dtype}",
+            setup=_engine_setup(dist, n, dtype),
+            workload=_sort_workload(n, np.dtype(dtype).itemsize),
+            smoke=in_smoke,
+        )
+        for dist, n, dtype, in_smoke in cells
+    ]
+
+
+# --- sortd ----------------------------------------------------------------
+
+
+def _segments_setup(batch: int, lo: int, hi: int, dtype: str):
+    def setup():
+        from repro.core import SortEngine
+
+        eng = SortEngine()
+        rng = np.random.default_rng(7)
+        lens = rng.integers(lo, hi, batch)
+        arrs = [rng.integers(0, 1 << 30, n).astype(dtype) for n in lens]
+        flat = np.concatenate(arrs)
+        seg_lens = [int(a.size) for a in arrs]
+        return lambda: eng.sort_segments(flat, seg_lens)
+
+    return setup
+
+
+def sortd_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    cells = [(64, True)]
+    if not smoke:
+        cells += [(256, False)]
+    out = []
+    for batch, in_smoke in cells:
+        # mean segment length (lo+hi)/2 sizes the work model; the draw is
+        # seeded, so the realized total is fixed per case anyway.
+        lo, hi = 256, 2048
+        total = batch * (lo + hi) // 2
+        out.append(PerfCase(
+            suite="sortd",
+            key=f"sort_segments/B{batch}/int32",
+            setup=_segments_setup(batch, lo, hi, "int32"),
+            workload=_sort_workload(total, 4),
+            smoke=in_smoke,
+        ))
+    return out
+
+
+# --- kernels --------------------------------------------------------------
+
+
+def _jnp_sort_setup(n: int):
+    def setup():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data.distributions import make_array
+
+        f = jax.jit(jnp.sort)
+        x = jnp.asarray(make_array("random", n, seed=n))
+        return lambda: f(x)
+
+    return setup
+
+
+def _local_sort_setup(n: int):
+    def setup():
+        import jax.numpy as jnp
+
+        from repro.data.distributions import make_array
+        from repro.kernels import ops
+
+        x = jnp.asarray(make_array("random", n, seed=n))
+        return lambda: ops.local_sort(x)
+
+    return setup
+
+
+def kernels_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    cases = [
+        PerfCase(
+            suite="kernels",
+            key="jnp_sort/65536",
+            setup=_jnp_sort_setup(65536),
+            workload=_sort_workload(65536, 4),
+        ),
+        PerfCase(
+            suite="kernels",
+            key="bitonic_interpret/4096",
+            setup=_local_sort_setup(4096),
+            # the interpreted Pallas path costs orders of magnitude more
+            # than its work model — the ratio still gates, but a ~400us
+            # python-interpreted call swings ~2x run to run, so the band
+            # is wide like netsim's
+            workload=_sort_workload(4096, 4),
+            lower=0.70,
+            upper=1.50,
+        ),
+    ]
+    if not smoke:
+        cases.append(PerfCase(
+            suite="kernels",
+            key="jnp_sort/262144",
+            setup=_jnp_sort_setup(262144),
+            workload=_sort_workload(262144, 4),
+            smoke=False,
+        ))
+    return cases
+
+
+# --- netsim ---------------------------------------------------------------
+
+
+def _netsim_setup(dims: tuple, chunk_elems: int):
+    def setup():
+        from repro.net.report import netsim_report
+
+        return lambda: netsim_report(dims=dims, chunk_elems=chunk_elems)
+
+    return setup
+
+
+def netsim_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    cells = [((1,), 256, True)]
+    if not smoke:
+        cells += [((1, 2), 1024, False)]
+    return [
+        PerfCase(
+            suite="netsim",
+            key=f"report/d{'-'.join(map(str, dims))}/chunk{chunk}",
+            setup=_netsim_setup(dims, chunk),
+            workload=None,  # event-loop cost; raw-seconds fallback
+            # Raw seconds on a pure-python event loop swing ~2x run to
+            # run (GC, allocator state); the band is wide by declaration.
+            lower=0.70,
+            upper=1.50,
+            smoke=in_smoke,
+        )
+        for dims, chunk, in_smoke in cells
+    ]
+
+
+# --- verify ---------------------------------------------------------------
+
+
+def _verify_setup(dtype: str):
+    def setup():
+        from repro.verify import differential, grid
+
+        scenarios = [sc for sc in grid.tier1_grid() if sc.dtype == dtype]
+        engines = differential.EngineCache(devices=1)
+        run = lambda: differential.run_grid(  # noqa: E731
+            scenarios, keep_outputs=False, engines=engines
+        )
+        run()  # warm every (shape bucket, method) executable in the slice
+        return run
+
+    return setup
+
+
+def _verify_workload(dtype: str) -> Workload:
+    from repro.verify import grid
+
+    total_bytes = 0.0
+    total_flops = 0.0
+    for sc in grid.tier1_grid():
+        if sc.dtype != dtype:
+            continue
+        w = _sort_workload(sc.n, np.dtype(sc.dtype).itemsize)
+        total_bytes += w.bytes_moved
+        total_flops += w.flops
+    return Workload(bytes_moved=total_bytes, flops=total_flops)
+
+
+def verify_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    dtypes = ["int32"] if smoke else ["int32", "uint32"]
+    return [
+        PerfCase(
+            suite="verify",
+            key=f"tier1/{dtype}",
+            setup=_verify_setup(dtype),
+            workload=_verify_workload(dtype),
+            smoke=dtype == "int32",
+        )
+        for dtype in dtypes
+    ]
+
+
+SUITES = {
+    "engine": engine_cases,
+    "sortd": sortd_cases,
+    "kernels": kernels_cases,
+    "netsim": netsim_cases,
+    "verify": verify_cases,
+}
+
+
+def cases_for(suite: str, *, smoke: bool = True) -> "list[PerfCase]":
+    if suite not in SUITES:
+        raise KeyError(f"unknown perf suite {suite!r}; choose from {SUITE_NAMES}")
+    return SUITES[suite](smoke=smoke)

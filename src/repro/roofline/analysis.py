@@ -172,6 +172,31 @@ def param_shape_set(params_shape_tree) -> set:
     return out
 
 
+def bound_time_s(
+    *,
+    flops: float = 0.0,
+    bytes_moved: float = 0.0,
+    intra_pod_bytes: float = 0.0,
+    inter_pod_bytes: float = 0.0,
+    hw: HW = V5E,
+) -> float:
+    """Roofline lower bound on wall time for an abstract workload.
+
+    The same three-term max as :func:`roofline_from_compiled`, but over
+    caller-supplied workload numbers instead of a compiled artifact — the
+    shared arithmetic behind the perf subsystem's machine normalization
+    (``repro.perf.normalize``, DESIGN.md §9).
+    """
+    t_compute = flops / hw.peak_bf16_flops if flops else 0.0
+    t_memory = bytes_moved / hw.hbm_bw if bytes_moved else 0.0
+    t_coll = 0.0
+    if intra_pod_bytes:
+        t_coll += intra_pod_bytes / hw.ici_bw
+    if inter_pod_bytes:
+        t_coll += inter_pod_bytes / hw.inter_pod_bw
+    return max(t_compute, t_memory, t_coll)
+
+
 def roofline_from_compiled(
     compiled,
     *,

@@ -1,6 +1,15 @@
-"""Target-hardware constants (TPU v5e, per assignment)."""
+"""Target-hardware constants (TPU v5e, per assignment) + host calibration.
+
+``V5E`` is the datasheet record the model-layer rooflines are judged
+against.  ``calibrate_host()`` is its measured twin for *this* machine:
+perf baselines (DESIGN.md §9) normalize wall-clock against the calibrated
+peaks so a committed reference survives a hardware change — the judged
+quantity is "multiples of this machine's roofline", not raw seconds.
+"""
 
 import dataclasses
+import functools
+import time
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,3 +30,56 @@ V5E = HW(
     inter_pod_bw=25e9,
     hbm_bytes=16e9,
 )
+
+
+def _copy_bandwidth(nbytes: int, repeats: int) -> float:
+    """Measured memcpy bandwidth in bytes/s (read + write counted)."""
+    import numpy as np
+
+    src = np.zeros(nbytes, dtype=np.uint8)
+    dst = np.empty_like(src)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        times.append(time.perf_counter() - t0)
+    return 2.0 * nbytes / float(np.median(times))
+
+
+def _gemm_flops(k: int, repeats: int) -> float:
+    """Measured dense f32 GEMM rate in FLOP/s (the host 'compute peak')."""
+    import numpy as np
+
+    a = np.ones((k, k), dtype=np.float32)
+    b = np.ones((k, k), dtype=np.float32)
+    a @ b  # BLAS thread-pool / page-fault warmup outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        a @ b
+        times.append(time.perf_counter() - t0)
+    return 2.0 * k**3 / float(np.median(times))
+
+
+@functools.lru_cache(maxsize=None)
+def calibrate_host(*, copy_mb: int = 64, gemm_k: int = 384, repeats: int = 5) -> HW:
+    """Measure this host's effective peaks and return them as an ``HW``.
+
+    Both probes are median-of-``repeats`` with a warmup (the measurement
+    contract of ``repro.perf.measure``, inlined here so roofline stays
+    importable without the perf package).  The link-tier fields reuse the
+    copy bandwidth — a single host has no slower interconnect tier — and
+    ``hbm_bytes`` is 0.0 (unknown/unused for normalization).  Cached: one
+    calibration per process, so every case in a perfguard run is
+    normalized against the same peaks.
+    """
+    bw = _copy_bandwidth(copy_mb << 20, repeats)
+    fl = _gemm_flops(gemm_k, repeats)
+    return HW(
+        name="host-calibrated",
+        peak_bf16_flops=fl,
+        hbm_bw=bw,
+        ici_bw=bw,
+        inter_pod_bw=bw,
+        hbm_bytes=0.0,
+    )

@@ -1,0 +1,353 @@
+"""Perf-regression gate unit tests (DESIGN.md §9).
+
+Everything runs on fabricated records — ``record_from_measurement`` is the
+test seam that turns hand-picked medians into fully normalized
+:class:`~repro.perf.schema.PerfRecord` objects without timing anything —
+so the classification, baseline round-trip, and normalization math are
+exercised deterministically with zero benchmark execution.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import perf
+from repro.perf.schema import TRAJECTORY_KEEP
+from repro.roofline.analysis import bound_time_s
+from repro.roofline.hw import HW
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# A fixed fixture machine: 1 GB/s memory, 10 GFLOP/s compute.  All the
+# numbers below are chosen against these peaks, so the expected roofline
+# times are exact powers of ten.
+FIX_HW = HW(
+    name="fixture-hw",
+    peak_bf16_flops=1e10,
+    hbm_bw=1e9,
+    ici_bw=1e9,
+    inter_pod_bw=1e9,
+    hbm_bytes=0.0,
+)
+
+# 1 MB moved, 1 kFLOP: memory-bound on FIX_HW → roofline_s = 1e6/1e9 = 1 ms.
+WORKLOAD = perf.Workload(bytes_moved=1e6, flops=1e3)
+ROOFLINE_S = 1e-3
+
+
+def rec(
+    case_id: str = "engine/sort/random/65536/int32",
+    median_s: float = 2e-3,
+    *,
+    workload: "perf.Workload | None" = WORKLOAD,
+    hw: HW = FIX_HW,
+    lower: float = 0.5,
+    upper: float = 0.75,
+    iqr_s: float = 0.0,
+) -> perf.PerfRecord:
+    return perf.record_from_measurement(
+        case_id=case_id,
+        median_s=median_s,
+        iqr_s=iqr_s,
+        warmup=1,
+        repeats=5,
+        workload=workload,
+        hw=hw,
+        lower=lower,
+        upper=upper,
+    )
+
+
+def baseline_of(*records: perf.PerfRecord, trajectory=None) -> dict:
+    return perf.build_baseline(
+        records,
+        suite="engine",
+        hw_name=FIX_HW.name,
+        recorded_utc="2026-08-08T00:00:00Z",
+        trajectory=trajectory,
+    )
+
+
+# --- normalization math ----------------------------------------------------
+
+
+def test_normalize_against_roofline():
+    out = perf.normalize(2e-3, WORKLOAD, FIX_HW)
+    assert out["normalized"] is True
+    assert out["roofline_s"] == pytest.approx(ROOFLINE_S)
+    assert out["norm_ratio"] == pytest.approx(2.0)  # 2 ms vs a 1 ms bound
+    assert out["pct_of_roofline"] == pytest.approx(50.0)
+
+
+def test_normalize_compute_bound_term():
+    # 1e8 FLOPs at 1e10 FLOP/s (10 ms) dominates 1e6 bytes at 1e9 B/s (1 ms).
+    w = perf.Workload(bytes_moved=1e6, flops=1e8)
+    assert perf.roofline_s(w, FIX_HW) == pytest.approx(1e-2)
+    assert bound_time_s(flops=1e8, bytes_moved=1e6, hw=FIX_HW) == pytest.approx(1e-2)
+
+
+def test_normalize_raw_fallback_without_workload():
+    out = perf.normalize(4.2e-3, None, FIX_HW)
+    assert out["normalized"] is False
+    assert out["roofline_s"] is None
+    assert out["norm_ratio"] == pytest.approx(4.2e-3)  # raw seconds
+    assert out["pct_of_roofline"] is None
+
+
+def test_roofline_rejects_empty_workload():
+    with pytest.raises(ValueError):
+        perf.roofline_s(perf.Workload(bytes_moved=0.0, flops=0.0), FIX_HW)
+
+
+# --- classification --------------------------------------------------------
+
+
+def test_classify_bands():
+    kw = dict(lower=0.5, upper=0.75)
+    assert perf.classify(2.0, 2.0, **kw)[0] == "pass"
+    assert perf.classify(3.2, 2.0, **kw)[0] == "warn"  # 1.6x > 1 + 0.75*0.75
+    assert perf.classify(3.6, 2.0, **kw)[0] == "fail"  # 1.8x > 1.75
+    assert perf.classify(0.9, 2.0, **kw)[0] == "warn"  # 0.45x < 0.5 → stale?
+
+
+def test_classify_asymmetric_tolerances():
+    # Wide regression arm, tight improvement arm: 1.5x passes but 0.85x warns.
+    kw = dict(lower=0.1, upper=1.0)
+    status, rel, _ = perf.classify(1.5, 1.0, **kw)
+    assert (status, rel) == ("pass", pytest.approx(1.5))
+    assert perf.classify(0.85, 1.0, **kw)[0] == "warn"
+    assert perf.classify(2.01, 1.0, **kw)[0] == "fail"
+    # Warn band sits at WARN_FRACTION of the regression arm (1.75x here).
+    assert perf.classify(1.8, 1.0, **kw)[0] == "warn"
+
+
+def test_classify_slack_scales_both_arms():
+    kw = dict(lower=0.5, upper=0.75)
+    assert perf.classify(4.5, 2.0, **kw)[0] == "fail"
+    assert perf.classify(4.5, 2.0, slack=2.0, **kw)[0] == "warn"  # 2.25x < 1+1.5
+    assert perf.classify(0.9, 2.0, slack=2.0, **kw)[0] == "pass"  # lo widened
+
+
+def test_classify_rejects_nonpositive_reference():
+    with pytest.raises(ValueError):
+        perf.classify(1.0, 0.0, lower=0.5, upper=0.75)
+
+
+# --- judge: the acceptance-criterion slowdown ------------------------------
+
+
+def test_injected_2x_slowdown_fails_with_roofline_delta():
+    baseline = baseline_of(rec(median_s=2e-3))
+    slowed = rec(median_s=4e-3)  # same case, twice the wall time
+    (v,) = perf.judge([slowed], baseline)
+    assert v.status == "fail"
+    assert not v.gate_ok
+    assert v.rel == pytest.approx(2.0)
+    # The detail must carry the %-of-roofline movement: 50% → 25%.
+    assert "%-of-roofline" in v.detail
+    assert "50.00% -> 25.00%" in v.detail
+    assert "-25.00pp" in v.detail
+    assert not perf.gate_ok([v])
+    assert perf.summarize([v])["fail"] == 1
+
+
+def test_judge_pass_within_band():
+    baseline = baseline_of(rec(median_s=2e-3))
+    (v,) = perf.judge([rec(median_s=2.2e-3)], baseline)
+    assert (v.status, v.gate_ok) == ("pass", True)
+    assert v.rel == pytest.approx(1.1)
+
+
+def test_judge_uses_baseline_tolerance_not_fresh():
+    # The committed band governs: a fresh record claiming a looser band
+    # cannot widen the gate it is judged under.
+    baseline = baseline_of(rec(median_s=2e-3, lower=0.1, upper=0.1))
+    fresh = rec(median_s=4e-3, lower=9.0, upper=9.0)
+    (v,) = perf.judge([fresh], baseline)
+    assert v.status == "fail"
+
+
+# --- judge: new / missing / workload drift ---------------------------------
+
+
+def test_judge_new_case_fails_gate():
+    baseline = baseline_of(rec())
+    verdicts = perf.judge([rec(), rec(case_id="engine/sort/local/65536/int32")], baseline)
+    by_status = {v.status for v in verdicts}
+    assert by_status == {"pass", "new"}
+    assert not perf.gate_ok(verdicts)
+    (new,) = [v for v in verdicts if v.status == "new"]
+    assert "--update-baseline" in new.detail
+
+
+def test_judge_no_baseline_all_new():
+    verdicts = perf.judge([rec(), rec(case_id="engine/b")], None)
+    assert [v.status for v in verdicts] == ["new", "new"]
+    assert not perf.gate_ok(verdicts)
+
+
+def test_judge_missing_case_fails_unless_subset():
+    baseline = baseline_of(rec(), rec(case_id="engine/sort/dupes/65536/int32"))
+    verdicts = perf.judge([rec()], baseline)
+    assert perf.summarize(verdicts) == {
+        "pass": 1, "warn": 0, "fail": 0, "new": 0, "missing": 1,
+    }
+    assert not perf.gate_ok(verdicts)
+    # Explicit subset runs (--filter / --smoke vs a --full baseline) skip it.
+    subset = perf.judge([rec()], baseline, subset=True)
+    assert [v.status for v in subset] == ["pass"]
+    assert perf.gate_ok(subset)
+
+
+def test_judge_changed_workload_is_incomparable():
+    baseline = baseline_of(rec())
+    drifted = rec(workload=perf.Workload(bytes_moved=2e6, flops=1e3))
+    (v,) = perf.judge([drifted], baseline)
+    assert v.status == "new"
+    assert "incomparable" in v.detail
+    assert not v.gate_ok
+
+
+def test_judge_slack_never_rescues_new_or_missing():
+    baseline = baseline_of(rec(), rec(case_id="engine/gone"))
+    verdicts = perf.judge(
+        [rec(), rec(case_id="engine/fresh")], baseline, slack=100.0
+    )
+    statuses = sorted(v.status for v in verdicts)
+    assert statuses == ["missing", "new", "pass"]
+    assert not perf.gate_ok(verdicts)
+
+
+# --- baseline round-trip & trajectory --------------------------------------
+
+
+def test_update_baseline_round_trip(tmp_path):
+    records = [rec(), rec(case_id="engine/sort/dupes/65536/int32", median_s=3e-3)]
+    doc = baseline_of(*records)
+    path = perf.baseline_path("engine", tmp_path)
+    assert path.name == "BENCH_engine.json"
+    perf.save_baseline(doc, path)
+    loaded = perf.load_baseline(path)
+    assert loaded == doc
+    assert loaded["case_count"] == 2
+    # Re-judging the very records that were recorded must be clean.
+    verdicts = perf.judge(records, loaded)
+    assert [v.status for v in verdicts] == ["pass", "pass"]
+    assert all(v.rel == pytest.approx(1.0) for v in verdicts)
+
+
+def test_load_baseline_rejects_unknown_schema(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text(json.dumps({"schema": 999, "cases": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        perf.load_baseline(p)
+
+
+def test_trajectory_appends_and_stays_bounded():
+    doc = baseline_of(rec())
+    assert len(doc["trajectory"]) == 1
+    entry = doc["trajectory"][0]
+    assert entry["hw"] == FIX_HW.name
+    assert entry["norm_ratios"] == {
+        "engine/sort/random/65536/int32": pytest.approx(2.0)
+    }
+    # Each --update-baseline threads the prior history through; the kept
+    # window is bounded at TRAJECTORY_KEEP.
+    for _ in range(TRAJECTORY_KEEP + 7):
+        doc = baseline_of(rec(), trajectory=doc["trajectory"])
+    assert len(doc["trajectory"]) == TRAJECTORY_KEEP
+
+
+def test_reference_entry_persists_workload_and_tolerance():
+    entry = perf.reference_entry(rec(median_s=2e-3, lower=0.2, upper=0.3))
+    assert entry["norm_ratio"] == pytest.approx(2.0)
+    assert entry["raw_s"] == pytest.approx(2e-3)
+    assert entry["workload"] == {"bytes_moved": 1e6, "flops": 1e3}
+    assert entry["tolerance"] == {"lower": 0.2, "upper": 0.3}
+    assert entry["normalized"] is True
+
+
+# --- reports ---------------------------------------------------------------
+
+
+def test_markdown_and_json_reports():
+    baseline = baseline_of(rec(median_s=2e-3))
+    verdicts = perf.judge([rec(median_s=4e-3)], baseline)
+    md = perf.markdown_report({"engine": verdicts}, hw_name=FIX_HW.name, slack=2.0)
+    assert "engine/sort/random/65536/int32" in md
+    assert "FAIL" in md
+    assert "slack: 2x" in md
+    doc = perf.json_report(
+        {"engine": verdicts}, {"engine": [rec(median_s=4e-3)]},
+        hw_name=FIX_HW.name, slack=2.0, elapsed_s=1.5,
+    )
+    assert doc["gate_ok"] is False
+    assert doc["totals"]["fail"] == 1
+    assert doc["suites"]["engine"]["verdicts"][0]["status"] == "fail"
+    assert doc["suites"]["engine"]["records"][0]["median_s"] == pytest.approx(4e-3)
+    json.dumps(doc)  # must be serializable as the CI artifact
+
+
+# --- CSV row contract ------------------------------------------------------
+
+
+def test_parse_csv_row_accepts_emit_format():
+    name, us, derived = perf.parse_csv_row("engine/sort/random,123.4,iqr_us=1.2")
+    assert name == "engine/sort/random"
+    assert us == pytest.approx(123.4)
+    assert derived == "iqr_us=1.2"
+    # derived may itself contain commas (split is bounded at 3 fields)
+    assert perf.parse_csv_row("a,1.0,x=1,y=2")[2] == "x=1,y=2"
+
+
+@pytest.mark.parametrize(
+    "row",
+    [
+        "onlyname",
+        "two,fields",
+        "bad name,1.0,d",
+        ",1.0,d",
+        "a,notanum,d",
+        "a,-1.0,d",
+        "a,inf,d",
+        "a,nan,d",
+    ],
+)
+def test_parse_csv_row_rejects(row):
+    with pytest.raises(ValueError):
+        perf.parse_csv_row(row)
+
+
+def test_validate_csv_skips_markers_and_header():
+    text = "name,us_per_call,derived\n# suite=engine\n\nok/row,1.0,d\nbad row,1,d\n"
+    problems = perf.validate_csv(text)
+    assert len(problems) == 1
+    assert "line 5" in problems[0]
+
+
+# --- CLI guards ------------------------------------------------------------
+
+
+def _perfguard(*argv: str):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "perfguard.py"), *argv],
+        capture_output=True, text=True, timeout=120,
+    )
+
+
+def test_cli_refuses_update_baseline_with_filter():
+    p = _perfguard("--update-baseline", "--filter", "engine/sort")
+    assert p.returncode == 2
+    assert "--filter" in p.stdout
+
+
+def test_cli_refuses_smoke_update_of_default_baselines():
+    p = _perfguard("--smoke", "--update-baseline")
+    assert p.returncode == 2
+    assert "--full" in p.stdout

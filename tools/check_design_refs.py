@@ -6,10 +6,11 @@ Three checks, all exiting non-zero with a listing on failure:
 1. **Section references**: every ``DESIGN.md §n`` citation under ``src/``,
    ``tests/``, ``benchmarks/``, ``examples/``, and ``tools/`` must resolve
    to a ``§<n>`` heading in ``DESIGN.md``.
-2. **Symbol coverage**: DESIGN.md §8 (the serving layer) must mention
-   every public symbol it owns — the ``__all__`` of ``repro.serve.sortd``
-   (parsed with ``ast``, so new exports automatically demand coverage)
-   plus the segmented-batch engine/partition API.
+2. **Symbol coverage**: every section in ``SYMBOL_SECTIONS`` must mention
+   the full public surface it owns — the module's ``__all__`` (parsed
+   with ``ast``, so new exports automatically demand coverage) plus
+   listed extras.  Currently §8 ↔ ``repro.serve.sortd`` (serving layer)
+   and §9 ↔ ``repro.perf`` (perf gate).
 3. **Intra-repo markdown links**: every relative ``[text](target)`` link
    in the top-level docs, ``docs/``, and ``benchmarks/README.md`` must
    point at an existing file (external ``http(s)``/``mailto`` links and
@@ -42,20 +43,34 @@ MD_FILES = (
 )
 MD_GLOBS = ("docs/*.md",)
 
-# §8 owns the serving layer: sortd's whole public surface (from __all__,
-# so a new export without documentation fails this check) plus the
-# segmented-batch engine/partition additions.
-SECTION8_EXTRA_SYMBOLS = (
-    "sort_segments",
-    "sort_many",
-    "plan_segments",
-    "estimate_batch_stats",
-    "choose_batch_plan",
-    "SEGMENT_BITONIC_MAX",
-    "pack_segments",
-    "unpack_segments",
-)
-SORTD_MODULE = "src/repro/serve/sortd.py"
+# Sections that own a public API surface: DESIGN.md §<n> must mention
+# every name in the module's ``__all__`` (parsed with ``ast``, so a new
+# export without documentation fails this check) plus the listed extras.
+SYMBOL_SECTIONS = {
+    8: (
+        "src/repro/serve/sortd.py",  # serving layer
+        (
+            "sort_segments",
+            "sort_many",
+            "plan_segments",
+            "estimate_batch_stats",
+            "choose_batch_plan",
+            "SEGMENT_BITONIC_MAX",
+            "pack_segments",
+            "unpack_segments",
+        ),
+    ),
+    9: (
+        "src/repro/perf/__init__.py",  # perf gate
+        (
+            "calibrate_host",
+            "bound_time_s",
+            "set_smoke",
+            "TRAJECTORY_KEEP",
+            "WARN_FRACTION",
+        ),
+    ),
+}
 
 
 def defined_sections() -> set[int]:
@@ -107,21 +122,26 @@ def section_text(number: int) -> str:
 
 def check_symbol_coverage() -> list[str]:
     problems = []
-    sortd = ROOT / SORTD_MODULE
-    if not sortd.exists():
-        return [f"symbol coverage: {SORTD_MODULE} missing"]
-    symbols = tuple(module_all(sortd)) + SECTION8_EXTRA_SYMBOLS
-    if not module_all(sortd):
-        problems.append(f"symbol coverage: {SORTD_MODULE} has no __all__")
-    body = section_text(8)
-    if not body:
-        return problems + ["symbol coverage: DESIGN.md has no §8 section"]
-    for sym in symbols:
-        if not re.search(rf"\b{re.escape(sym)}\b", body):
+    for section, (module, extras) in sorted(SYMBOL_SECTIONS.items()):
+        path = ROOT / module
+        if not path.exists():
+            problems.append(f"symbol coverage: {module} missing")
+            continue
+        exported = module_all(path)
+        if not exported:
+            problems.append(f"symbol coverage: {module} has no __all__")
+        body = section_text(section)
+        if not body:
             problems.append(
-                f"UNDOCUMENTED: DESIGN.md §8 does not mention `{sym}` "
-                f"(public serving-layer symbol)"
+                f"symbol coverage: DESIGN.md has no §{section} section"
             )
+            continue
+        for sym in tuple(exported) + tuple(extras):
+            if not re.search(rf"\b{re.escape(sym)}\b", body):
+                problems.append(
+                    f"UNDOCUMENTED: DESIGN.md §{section} does not mention "
+                    f"`{sym}` (public symbol of {module})"
+                )
     return problems
 
 
@@ -173,9 +193,10 @@ def main() -> int:
             f"defined sections: {sorted(sections)})"
         )
         return 1
+    covered = ", ".join(f"§{n}" for n in sorted(SYMBOL_SECTIONS))
     print(
         f"check_design_refs: OK — {len(refs)} § references resolve to sections "
-        f"{sorted(sections)}, §8 covers the serving-layer symbols, "
+        f"{sorted(sections)}, {covered} cover their public symbols, "
         f"{len(md_files())} markdown files link-checked"
     )
     return 0
