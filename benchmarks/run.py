@@ -12,8 +12,9 @@ comparable to real runs).  ``--dtype`` selects the key type for the
 suites that sweep the paper's "different integer array types" axis
 (``engine``, ``verify``, ``sortd``); the rest pin the paper's int32.  The
 ``sortd`` suite additionally honours ``--arrival/--rate/--clients`` (load
-generator shape) and ``--report`` (JSON report path) — see
-``benchmarks/README.md``.
+generator shape) and ``--report`` (JSON report path); the ``fleet`` suite
+honours ``--workers/--fleet-clients/--chaos/--no-chaos/--fleet-report`` —
+see ``benchmarks/README.md``.
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ from benchmarks import (
     bench_counters,
     bench_efficiency,
     bench_engine,
+    bench_fleet,
     bench_kernels,
     bench_moe_dispatch,
     bench_netsim,
@@ -60,6 +62,14 @@ SUITES = {
         rate=a.rate,
         clients=a.clients,
         report=a.report,
+    ),
+    "fleet": lambda a: bench_fleet.run(  # multi-worker serving (DESIGN.md §10)
+        a.paper,
+        dtype=a.dtype or DEFAULT_DTYPE,
+        workers=a.workers,
+        clients=a.fleet_clients,
+        chaos=a.chaos,
+        report=a.fleet_report,
     ),
 }
 
@@ -99,6 +109,25 @@ def main() -> None:
     sortd.add_argument(
         "--report", default="sortd_report.json",
         help="sortd JSON report path ('' disables)",
+    )
+    fleet = ap.add_argument_group("fleet suite")
+    fleet.add_argument(
+        "--workers", type=int, default=4,
+        help="fleet worker count for the scaling comparison",
+    )
+    fleet.add_argument(
+        "--fleet-clients", type=int, default=2,
+        help="closed-loop clients for the fleet scaling gate (the "
+        "latency-bound regime; --paper also sweeps c=8)",
+    )
+    fleet.add_argument(
+        "--chaos", dest="chaos", action="store_true", default=True,
+        help="run the chaos section (kill the busiest worker mid-load)",
+    )
+    fleet.add_argument("--no-chaos", dest="chaos", action="store_false")
+    fleet.add_argument(
+        "--fleet-report", default="fleet_report.json",
+        help="fleet JSON report path ('' disables)",
     )
     args = ap.parse_args()
     if args.smoke and args.paper:

@@ -73,6 +73,29 @@ class FaultScenario:
             failed_links=(((g, 0), (0, g)),),
         )
 
+    @classmethod
+    def worker_down(cls, w: int) -> "FaultScenario":
+        """Serving-fleet vocabulary: fleet worker ``w`` ≡ OHHC group ``w``
+        losing its hub node (g,0) — and with it, its OTIS uplink.
+
+        This is the simulator-side twin of ``ChaosConfig`` killing fleet
+        worker ``w`` (DESIGN.md §10): the group hub is an *internal*
+        accumulation-tree destination, so ``rebuild_degraded`` raises
+        :class:`GatherImpossible` — a dead worker cannot be routed around
+        inside one gather, it must be drained and its work re-admitted,
+        which is exactly the fleet's failover policy.  Contrast with
+        :meth:`optical_link_down`, where only the uplink dies and relay
+        chains reroute the gather.
+        """
+        if w < 0:
+            raise ValueError("worker index must be >= 0")
+        links = () if w == 0 else (((w, 0), (0, w)),)
+        return cls(
+            name=f"worker{w}_down",
+            failed_links=links,
+            failed_nodes=((w, 0),),
+        )
+
 
 def rebuild_degraded(
     schedule: "AccumulationSchedule | Sequence[Sequence[Send]]",

@@ -1,4 +1,17 @@
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.sortd import Sortd, SortdConfig, QueueFull
+from repro.serve.sortd import Sortd, SortdConfig, QueueFull, WorkerKilled, affinity_key
+from repro.serve.fleet import SortdFleet, FleetConfig, ChaosConfig, FleetDown
 
-__all__ = ["ServeEngine", "Request", "Sortd", "SortdConfig", "QueueFull"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "Sortd",
+    "SortdConfig",
+    "QueueFull",
+    "WorkerKilled",
+    "affinity_key",
+    "SortdFleet",
+    "FleetConfig",
+    "ChaosConfig",
+    "FleetDown",
+]

@@ -1,0 +1,31 @@
+"""repro.serve.fleet — multi-worker sortd serving (DESIGN.md §10).
+
+N :class:`~repro.serve.sortd.Sortd` workers behind one admission layer:
+(dtype, bucket)-affinity routing with watermark work stealing, heartbeat
+health checking with drain-and-readmit failover, deterministic chaos
+injection, and fleet-wide observability.  Load generation lives in
+:mod:`repro.serve.fleet.loadgen` (bench/test-facing, not exported here).
+"""
+
+from repro.serve.fleet.fleet import (
+    ChaosConfig,
+    FleetConfig,
+    FleetDown,
+    SortdFleet,
+    write_json,
+)
+from repro.serve.fleet.health import HealthMonitor, WorkerState
+from repro.serve.fleet.routing import AffinityRouter, RouteDecision, rendezvous_worker
+
+__all__ = [
+    "SortdFleet",
+    "FleetConfig",
+    "ChaosConfig",
+    "FleetDown",
+    "AffinityRouter",
+    "RouteDecision",
+    "rendezvous_worker",
+    "HealthMonitor",
+    "WorkerState",
+    "write_json",
+]

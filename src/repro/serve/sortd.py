@@ -41,6 +41,31 @@ Mechanics:
 Threading contract: any number of producer threads may call ``submit``;
 all engine/device work happens on the single worker thread, so the jit
 cache and ``last_report`` see strictly serial traffic.
+
+Fleet hooks (DESIGN.md §10): ``repro.serve.fleet`` runs N of these
+workers behind one admission layer, which needs three seams this module
+owns:
+
+* **Idle flush** (``SortdConfig.idle_flush_s``): the coalescing deadline
+  (``max_wait_s``) buys batch size only while traffic is still arriving;
+  when the request queue is *empty* — every producer is blocked on a
+  Future — waiting out the full deadline is pure idle time (measured:
+  30–50% of wall under closed-loop load).  With ``idle_flush_s`` set, a
+  bin whose oldest request has waited that long flushes early (reason
+  ``idle``) whenever the queue is empty; under sustained arrival the
+  queue is non-empty and the full ``max_wait_s`` still governs.  Off
+  (``None``) by default — standalone sortd behavior is unchanged.
+* **Tick hooks** (``add_tick_hook``): callbacks run on the worker thread
+  once per loop iteration and after every flush — the fleet's heartbeat
+  (and chaos stall-injection) point.  ``tick_interval_s`` caps the idle
+  queue wait so a traffic-less worker still ticks.
+* **Crash simulation** (``kill()``): the worker thread aborts at its next
+  tick *without* draining or flushing — queued requests are left as
+  dangling futures, exactly what a real worker crash does.  The fleet's
+  health checker detects the dead thread and re-admits the backlog from
+  its own bookkeeping (:class:`WorkerKilled` is the internal control
+  exception).  ``close()`` after a kill still joins cleanly; only the
+  fleet layer guarantees the orphaned work is served.
 """
 
 from __future__ import annotations
@@ -57,11 +82,29 @@ import numpy as np
 from repro.core.engine import SortEngine
 from repro.kernels import ops
 
-__all__ = ["Sortd", "SortdConfig", "QueueFull"]
+__all__ = ["Sortd", "SortdConfig", "QueueFull", "WorkerKilled", "affinity_key"]
 
 
 class QueueFull(RuntimeError):
     """Raised by ``submit`` when the bounded queue is at capacity."""
+
+
+class WorkerKilled(BaseException):
+    """Control exception aborting the worker thread on ``kill()``.
+
+    Derives from ``BaseException`` so the per-flush ``except Exception``
+    guards can never swallow a chaos kill into a batch failure.
+    """
+
+
+def affinity_key(arr: np.ndarray) -> "tuple[str, int]":
+    """The ``(dtype, pow2 shape bucket)`` coalescing/affinity key.
+
+    One rule shared by the sortd bins, the engine's warm jit cache, and
+    the fleet's affinity router — same key ⇒ same bin ⇒ same compiled
+    executable ⇒ (in a fleet) same worker.
+    """
+    return (str(arr.dtype), ops.bucketed_length(max(arr.size, 1)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +118,15 @@ class SortdConfig:
                     the direct per-array engine path.
     block_on_full:  submit blocks (True) or raises QueueFull (False).
     latency_window: per-bucket sliding-window size for the percentiles.
+    idle_flush_s:   with the request queue EMPTY, flush a bin once its
+                    oldest row has waited this long (reason ``idle``) —
+                    waiting out max_wait_s with no traffic arriving is
+                    pure idle time.  None (default) disables; must be
+                    < max_wait_s to have any effect.
+    tick_interval_s: upper bound on the idle queue wait so tick hooks
+                    (fleet heartbeats) keep firing with no traffic.
+                    None (default) lets an idle worker sleep until the
+                    next request.
     """
 
     max_queue: int = 1024
@@ -83,6 +135,8 @@ class SortdConfig:
     max_bucket: int = 1 << 15
     block_on_full: bool = False
     latency_window: int = 4096
+    idle_flush_s: "float | None" = None
+    tick_interval_s: "float | None" = None
 
 
 @dataclasses.dataclass
@@ -96,7 +150,12 @@ class _Stop:
     pass
 
 
+class _Nudge:
+    """Queue no-op: wakes the worker loop (kill/tick) without carrying work."""
+
+
 _STOP = _Stop()
+_NUDGE = _Nudge()
 
 
 class _BucketStats:
@@ -137,13 +196,18 @@ class Sortd:
         # drained and exited, leaving a Future that never resolves.
         self._close_lock = threading.Lock()
         self._closed = False
+        self._killed = False
+        self._binned = 0  # rows currently sitting in bins (worker thread)
         self._thread: threading.Thread | None = None
+        self._tick_hooks: list = []
+        self._t_start = time.monotonic()
+        self._busy_s = 0.0  # worker-thread cumulative flush/serve time
         # metrics (under _lock)
         self._completed = 0
         self._oversize_direct = 0
         self._rejected = 0
         self._failed = 0
-        self._flushes = {"full": 0, "deadline": 0, "close": 0}
+        self._flushes = {"full": 0, "deadline": 0, "idle": 0, "close": 0}
         self._max_queue_depth = 0
         self._buckets: dict[str, _BucketStats] = {}
         self._all_lat_s: collections.deque = collections.deque(
@@ -163,16 +227,31 @@ class Sortd:
         return self
 
     def close(self) -> None:
-        """Stop accepting requests, flush everything queued, join the worker."""
+        """Stop accepting requests, flush everything queued, join the worker.
+
+        Drain guarantee: every request whose ``submit`` returned before
+        ``close`` was called gets served — its Future resolves — before
+        ``close`` returns (the fleet's failover re-admission leans on this
+        invariant).  The single exception is a worker aborted by ``kill()``
+        (chaos crash simulation): its backlog is intentionally left
+        dangling, and only the fleet layer re-admits it.
+        """
         with self._close_lock:
             if self._closed:
                 return
             self._closed = True
             # Under the close lock: every submit that passed its closed-check
             # has already enqueued, so its item sits before this sentinel and
-            # the worker's final drain serves it.
+            # the worker's final drain serves it.  The put must not block
+            # forever on a full queue whose worker crashed — poll liveness.
             if self._thread is not None:
-                self._queue.put(_STOP)
+                while True:
+                    try:
+                        self._queue.put(_STOP, timeout=0.1)
+                        break
+                    except queue.Full:
+                        if not self._thread.is_alive():
+                            break  # crashed worker: nobody will drain
         if self._thread is None:
             # never started: serve the backlog inline so no future dangles
             self._drain_queue()
@@ -180,6 +259,36 @@ class Sortd:
             return
         self._thread.join()
         self._thread = None
+
+    def kill(self) -> None:
+        """Chaos hook: simulate a worker crash (DESIGN.md §10).
+
+        The worker thread aborts at its next tick WITHOUT flushing — all
+        queued/binned requests are left as dangling futures, exactly like a
+        real crash.  Safe to call from any thread; idempotent.
+        """
+        self._killed = True
+        try:
+            self._queue.put_nowait(_NUDGE)  # wake a blocked worker now
+        except queue.Full:
+            pass  # a full queue wakes the worker anyway
+
+    def add_tick_hook(self, fn) -> None:
+        """Register ``fn()`` to run on the worker thread each loop iteration
+        and after every flush — the fleet heartbeat/chaos-injection seam."""
+        self._tick_hooks.append(fn)
+
+    def backlog(self) -> int:
+        """Requests accepted but not yet served (queued + binned).
+
+        Approximate under concurrency — good enough for the fleet's
+        steal/health heuristics, never used for correctness.
+        """
+        return self._queue.qsize() + self._binned
+
+    @property
+    def worker_alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
 
     def __enter__(self) -> "Sortd":
         return self.start()
@@ -243,6 +352,8 @@ class Sortd:
                 "flushes": dict(self._flushes),
                 "queue_depth": self._queue.qsize(),
                 "max_queue_depth": self._max_queue_depth,
+                "busy_s": self._busy_s,
+                "uptime_s": time.monotonic() - self._t_start,
                 "latency_ms": {
                     "p50": pct(self._all_lat_s, 50),
                     "p99": pct(self._all_lat_s, 99),
@@ -252,26 +363,61 @@ class Sortd:
 
     # ------------------------------------------------------------- worker
     def _bin_key(self, arr: np.ndarray) -> tuple[str, int]:
-        return (str(arr.dtype), ops.bucketed_length(max(arr.size, 1)))
+        return affinity_key(arr)
+
+    def _beat(self) -> None:
+        for fn in self._tick_hooks:
+            fn()
+
+    def _tick(self) -> None:
+        self._beat()
+        if self._killed:
+            raise WorkerKilled("chaos kill")
+
+    def _wait_budget(self) -> float:
+        """How long the oldest binned request may wait before a flush.
+
+        ``max_wait_s`` while traffic is arriving; the (shorter)
+        ``idle_flush_s`` once the queue is empty — every producer is then
+        blocked on a Future and further waiting buys no batch size.
+        """
+        cfg = self.config
+        if (
+            cfg.idle_flush_s is not None
+            and cfg.idle_flush_s < cfg.max_wait_s
+            and self._queue.qsize() == 0
+        ):
+            return cfg.idle_flush_s
+        return cfg.max_wait_s
 
     def _next_deadline(self) -> float | None:
         if not self._bins:
             return None
         oldest = min(batch[0].t_enqueue for batch in self._bins.values())
-        return oldest + self.config.max_wait_s
+        return oldest + self._wait_budget()
 
     def _run(self) -> None:
+        try:
+            self._run_loop()
+        except WorkerKilled:
+            return  # simulated crash: exit without draining or flushing
+
+    def _run_loop(self) -> None:
         while True:
+            self._tick()
             deadline = self._next_deadline()
             timeout = (
                 max(0.0, deadline - time.monotonic()) if deadline is not None else None
             )
+            tick_s = self.config.tick_interval_s
+            if tick_s is not None:
+                timeout = tick_s if timeout is None else min(timeout, tick_s)
             try:
                 item = self._queue.get(timeout=timeout)
             except queue.Empty:
                 item = None
             stop = isinstance(item, _Stop)
-            if item is not None and not stop:
+            if item is not None and not stop and not isinstance(item, _Nudge):
                 self._route(item)
             if not stop:
                 # Greedy drain: coalesce the backlog before looking at
@@ -298,6 +444,8 @@ class Sortd:
                     if isinstance(nxt, _Stop):
                         stop = True
                         break
+                    if isinstance(nxt, _Nudge):
+                        continue
                     self._route(nxt)
                     budget -= 1
             if stop:
@@ -312,7 +460,7 @@ class Sortd:
                 item = self._queue.get_nowait()
             except queue.Empty:
                 return
-            if not isinstance(item, _Stop):
+            if not isinstance(item, (_Stop, _Nudge)):
                 self._route(item)
 
     def _route(self, item: _Pending) -> None:
@@ -321,17 +469,21 @@ class Sortd:
             return
         key = self._bin_key(item.keys)
         self._bins.setdefault(key, []).append(item)
+        self._binned += 1
         if len(self._bins[key]) >= self.config.max_batch:
             self._flush(key, "full")
 
     def _flush_expired(self) -> None:
         now = time.monotonic()
+        budget = self._wait_budget()
         for key in [
             k
             for k, batch in self._bins.items()
-            if now - batch[0].t_enqueue >= self.config.max_wait_s
+            if now - batch[0].t_enqueue >= budget
         ]:
-            self._flush(key, "deadline")
+            waited = now - self._bins[key][0].t_enqueue
+            reason = "deadline" if waited >= self.config.max_wait_s else "idle"
+            self._flush(key, reason)
 
     def _flush_all(self, reason: str) -> None:
         for key in list(self._bins):
@@ -339,6 +491,8 @@ class Sortd:
 
     def _flush(self, key: tuple[str, int], reason: str) -> None:
         batch = self._bins.pop(key)
+        self._binned -= len(batch)
+        t_busy0 = time.monotonic()
         dtype_str, bucket = key
         lens = [p.keys.size for p in batch]
         try:
@@ -349,12 +503,14 @@ class Sortd:
             )
             outs = self.engine.sort_segments(flat, lens)
         except Exception as e:  # one bad batch must not kill its siblings' futures
+            self._busy_s += time.monotonic() - t_busy0
             with self._lock:
                 self._failed += len(batch)
             for p in batch:
                 p.future.set_exception(e)
             return
         done = time.monotonic()
+        self._busy_s += done - t_busy0
         lats = [done - p.t_enqueue for p in batch]
         # Account BEFORE resolving: a caller that wakes on the last future
         # and immediately reads metrics() must see these requests counted.
@@ -371,16 +527,21 @@ class Sortd:
             b.lat_s.extend(lats)
         for p, out in zip(batch, outs):
             p.future.set_result(out)
+        self._beat()  # heartbeat between flushes of a long backlog
 
     def _serve_direct(self, item: _Pending) -> None:
+        t_busy0 = time.monotonic()
         try:
             out = self.engine.sort(item.keys)
         except Exception as e:
+            self._busy_s += time.monotonic() - t_busy0
             with self._lock:
                 self._failed += 1
             item.future.set_exception(e)
             return
-        lat = time.monotonic() - item.t_enqueue
+        done = time.monotonic()
+        self._busy_s += done - t_busy0
+        lat = done - item.t_enqueue
         with self._lock:  # account before resolving (see _flush)
             self._oversize_direct += 1
             self._completed += 1
@@ -392,6 +553,7 @@ class Sortd:
             b.valid_cells += item.keys.size
             b.lat_s.append(lat)
         item.future.set_result(out)
+        self._beat()
 
     def _bucket_stats(self, key: str) -> _BucketStats:
         b = self._buckets.get(key)

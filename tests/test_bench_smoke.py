@@ -39,6 +39,7 @@ SUITE_NAMES = (
     "netsim",
     "verify",
     "sortd",
+    "fleet",
 )
 
 
@@ -49,7 +50,7 @@ def smoke_output() -> str:
     proc = subprocess.run(
         [
             sys.executable, "-m", "benchmarks.run", "--smoke",
-            "--arrival", "none", "--report", "",
+            "--arrival", "none", "--report", "", "--fleet-report", "",
         ],
         cwd=ROOT, env=env, capture_output=True, text=True, timeout=600,
     )

@@ -203,6 +203,39 @@ def test_failed_leaf_node_degrades_but_completes():
     assert res.master_elems == topo.total_procs - 1  # exactly the leaf lost
 
 
+def test_worker_down_scenario_cannot_be_rerouted():
+    """``FaultScenario.worker_down`` (the serving fleet's vocabulary for a
+    dead worker ≡ a dead group hub) kills an *internal* accumulation
+    destination: unlike ``optical_link_down``, no relay chain saves the
+    gather — the simulator agrees with the fleet that a dead worker must
+    be drained, not routed around."""
+    topo = OHHCTopology(1, "full")
+    sched = AccumulationSchedule.build(topo)
+    down = FaultScenario.worker_down(1)
+    assert down.name == "worker1_down"
+    assert (1, 0) in down.failed_nodes
+    assert down.failed_links == (((1, 0), (0, 1)),)
+    with pytest.raises(GatherImpossible):
+        rebuild_degraded(sched, topo, down.router(topo))
+    # the contrast case: only the uplink down — reroute succeeds
+    rerouted = rebuild_degraded(
+        sched, topo, FaultScenario.optical_link_down(1).router(topo)
+    )
+    assert any(s.phase.endswith("+reroute") for rnd in rerouted for s in rnd)
+
+
+def test_worker_down_group_zero_is_the_master_hub():
+    """Worker 0 maps to the master's own hub: no uplink to fail (the OTIS
+    self-transpose hole), and the gather is trivially impossible."""
+    topo = OHHCTopology(1, "full")
+    down = FaultScenario.worker_down(0)
+    assert down.failed_links == () and down.failed_nodes == ((0, 0),)
+    with pytest.raises(GatherImpossible):
+        rebuild_degraded(AccumulationSchedule.build(topo), topo, down.router(topo))
+    with pytest.raises(ValueError):
+        FaultScenario.worker_down(-1)
+
+
 def test_repeated_source_in_one_round_conserves_elements():
     """A caller-supplied round with two sends from one source must not
     double-count the payload: the second send carries 0 (drain-at-read)."""

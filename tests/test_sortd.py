@@ -133,6 +133,57 @@ def test_close_flushes_pending_and_rejects_new():
         sd.submit(x)
 
 
+def test_close_under_queued_backlog_drains_every_future():
+    """Regression for the fleet's drain lean: close() called while a real
+    backlog is still queued/binned on a LIVE worker must serve all of it —
+    every pre-close Future resolves exactly — before returning."""
+    cfg = SortdConfig(max_batch=1024, max_wait_s=30.0)  # only close flushes
+    xs = [mk(n, seed=n) for n in (70, 300, 300, 1200, 1200, 1200, 2900)]
+    with Sortd(SortEngine(TOPO), cfg) as sd:
+        futs = [sd.submit(x) for x in xs]
+        # no deadline can expire and no batch fills: the backlog is real
+    for x, f in zip(xs, futs):
+        np.testing.assert_array_equal(f.result(timeout=0), np.sort(x))
+    m = sd.metrics()
+    assert m["completed"] == len(xs) and m["failed"] == 0
+    assert m["flushes"]["close"] >= 1
+    assert m["flushes"]["deadline"] == 0 and m["flushes"]["full"] == 0
+
+
+def test_idle_flush_beats_the_coalescing_deadline():
+    """With ``idle_flush_s`` set, a lone request (empty queue ⇒ nobody to
+    coalesce with) flushes on the short idle budget instead of waiting out
+    ``max_wait_s`` — the fleet's throughput lever (DESIGN.md §10)."""
+    cfg = SortdConfig(max_wait_s=2.0, idle_flush_s=1e-4)
+    with Sortd(SortEngine(TOPO), cfg) as sd:
+        x = mk(512, seed=2)
+        sd.sort(x)  # warm the bucket executable
+        t0 = time.monotonic()
+        out = sd.submit(x).result(timeout=120)
+        elapsed = time.monotonic() - t0
+        m = sd.metrics()
+    np.testing.assert_array_equal(out, np.sort(x))
+    assert m["flushes"]["idle"] >= 1
+    assert elapsed < 1.0  # far below the 2s deadline it did NOT wait out
+
+
+def test_kill_crashes_worker_without_draining():
+    """Chaos contract: kill() aborts the worker at its next tick; queued
+    futures dangle (the FLEET re-admits them, a lone sortd never will)."""
+    from repro.serve.sortd import WorkerKilled  # noqa: F401 — exported name
+
+    cfg = SortdConfig(max_batch=1024, max_wait_s=30.0)
+    with Sortd(SortEngine(TOPO), cfg) as sd:
+        fut = sd.submit(mk(256, seed=4))
+        sd.kill()
+        deadline = time.monotonic() + 10.0
+        while sd.worker_alive and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert not sd.worker_alive
+        assert not fut.done()  # intentionally dangling — a real crash
+    assert not fut.done()  # close() must not secretly serve a crashed drain
+
+
 def test_concurrent_clients_all_exact():
     cfg = SortdConfig(max_batch=16, max_wait_s=0.005, max_bucket=1 << 11)
     failures = []

@@ -9,8 +9,9 @@ Three checks, all exiting non-zero with a listing on failure:
 2. **Symbol coverage**: every section in ``SYMBOL_SECTIONS`` must mention
    the full public surface it owns — the module's ``__all__`` (parsed
    with ``ast``, so new exports automatically demand coverage) plus
-   listed extras.  Currently §8 ↔ ``repro.serve.sortd`` (serving layer)
-   and §9 ↔ ``repro.perf`` (perf gate).
+   listed extras.  Currently §8 ↔ ``repro.serve.sortd`` (serving layer),
+   §9 ↔ ``repro.perf`` (perf gate), and §10 ↔ ``repro.serve.fleet``
+   (multi-worker serving).
 3. **Intra-repo markdown links**: every relative ``[text](target)`` link
    in the top-level docs, ``docs/``, and ``benchmarks/README.md`` must
    point at an existing file (external ``http(s)``/``mailto`` links and
@@ -68,6 +69,16 @@ SYMBOL_SECTIONS = {
             "set_smoke",
             "TRAJECTORY_KEEP",
             "WARN_FRACTION",
+        ),
+    ),
+    10: (
+        "src/repro/serve/fleet/__init__.py",  # multi-worker serving
+        (
+            "request_mix",
+            "drive_closed_loop",
+            "drive_open_loop",
+            "worker_down",
+            "idle_flush_s",
         ),
     ),
 }
