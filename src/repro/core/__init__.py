@@ -32,6 +32,8 @@ from repro.core.ohhc_sort import (
 )
 from repro.core.dist_sort import dist_sort, host_check_globally_sorted
 from repro.core.engine import (
+    BITONIC_METHODS,
+    ROW_BACKENDS,
     SEGMENT_BITONIC_MAX,
     InputStats,
     SortEngine,
@@ -39,12 +41,15 @@ from repro.core.engine import (
     autotune_capacity,
     choose_batch_plan,
     choose_plan,
+    choose_row_backend,
     estimate_batch_stats,
     estimate_stats,
     x64_enabled,
 )
 
 __all__ = [
+    "BITONIC_METHODS",
+    "ROW_BACKENDS",
     "SEGMENT_BITONIC_MAX",
     "InputStats",
     "SortEngine",
@@ -52,6 +57,7 @@ __all__ = [
     "autotune_capacity",
     "choose_batch_plan",
     "choose_plan",
+    "choose_row_backend",
     "estimate_batch_stats",
     "estimate_stats",
     "x64_enabled",

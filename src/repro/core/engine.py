@@ -49,6 +49,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -58,6 +60,7 @@ import numpy as np
 from repro.core import partition
 from repro.core.ohhc_sort import ohhc_sort_host
 from repro.core.topology import OHHCTopology
+from repro.kernels import batched as batched_kernels
 from repro.kernels import ops
 
 # Granularity cap for stats histograms: coarser than P only ever
@@ -68,6 +71,119 @@ _MAX_STAT_BUCKETS = 256
 # sentinel-padded bitonic row kernel instead of the P-way bucket machinery
 # (see choose_batch_plan).
 SEGMENT_BITONIC_MAX = 1 << 13
+
+# The row-sort backends the bitonic segment path can run on (DESIGN.md §8):
+# ``vmap`` is the vmapped XLA-level sort, ``pallas`` the fused batched
+# Pallas kernel (``kernels/batched.py``, sentinel-fill + sort + validity
+# mask in ONE pallas_call with the grid over the batch axis), ``pallas2op``
+# the same kernel with the NICE 2-op compare-exchange stage.  Each backend
+# is a distinct plan method so the jit cache, ``SortPlan.reason`` and the
+# sortd metrics all name the executed kernel.
+ROW_BACKENDS = ("vmap", "pallas", "pallas2op")
+_BACKEND_METHODS = {
+    "vmap": "bitonic",
+    "pallas": "bitonic_pallas",
+    "pallas2op": "bitonic2op",
+}
+# Every method string that means "direct sentinel-padded row sort" — no
+# capacity, no overflow (the complement of the bucket-path methods).
+BITONIC_METHODS = tuple(_BACKEND_METHODS.values())
+
+# One measured head-to-head per (row bucket, dtype, probe batch) per
+# process — shared across engines so a fleet of workers probes once, like
+# a jit cache.
+_ROW_BACKEND_CACHE: dict[tuple[int, str, int], tuple[str, str]] = {}
+
+# The probe batch is bucketed to the serving batch (pow2, clamped) because
+# relative backend cost is batch-dependent: the interpreted Pallas grid
+# walks rows sequentially while the vmapped XLA sort amortizes across the
+# whole batch, so a B=8 probe mispredicts a B=64 serve.
+_PROBE_BATCH_MIN, _PROBE_BATCH_MAX = 8, 64
+
+
+def _probe_batch_for(batch_hint: int) -> int:
+    b = max(int(batch_hint), 1)
+    return min(max(1 << (b - 1).bit_length(), _PROBE_BATCH_MIN), _PROBE_BATCH_MAX)
+
+
+def choose_row_backend(
+    padded_n: int,
+    dtype,
+    *,
+    local_sort: Callable | None = None,
+    batch_hint: int = 8,
+    probe_batch: "int | None" = None,
+    repeats: int = 3,
+) -> tuple[str, str]:
+    """Autotuned row-sort backend for bitonic segment rows: measured
+    head-to-head of the vmapped XLA path vs the fused Pallas kernel
+    (both variants on integer keys), at plan time, on this host's actual
+    execution mode (interpret on CPU, compiled Mosaic on TPU).
+
+    The probe runs at the serving batch size (``batch_hint`` bucketed by
+    :func:`_probe_batch_for`; ``probe_batch`` overrides it exactly) —
+    backend ranking flips with batch, so probing a fixed tiny batch would
+    select a backend the real batch then loses with.
+
+    Returns ``(backend, detail)`` where ``detail`` is the human-readable
+    probe record that lands in ``SortPlan.reason``.  Cached per
+    ``(padded_n, dtype, probe batch)`` for the process; ``REPRO_ROW_BACKEND``
+    forces a backend (``vmap`` / ``pallas`` / ``pallas2op``) and skips the
+    probe — the deterministic knob tests, benchmarks and operators use.
+    """
+    forced = os.environ.get("REPRO_ROW_BACKEND", "").strip().lower()
+    if forced:
+        if forced not in ROW_BACKENDS:
+            raise ValueError(
+                f"REPRO_ROW_BACKEND={forced!r} not in {ROW_BACKENDS}"
+            )
+        return forced, f"row_backend={forced} (forced via REPRO_ROW_BACKEND)"
+    if probe_batch is None:
+        probe_batch = _probe_batch_for(batch_hint)
+    np_dtype = np.dtype(dtype)
+    key = (padded_n, str(np_dtype), probe_batch)
+    hit = _ROW_BACKEND_CACHE.get(key)
+    if hit is not None:
+        return hit
+    interpret = ops._auto_interpret(None)
+    rng = np.random.default_rng(padded_n)
+    if np.issubdtype(np_dtype, np.integer):
+        info = np.iinfo(np_dtype)
+        x = rng.integers(
+            info.min, info.max, (probe_batch, padded_n), dtype=np_dtype
+        )
+    else:
+        x = rng.normal(size=(probe_batch, padded_n)).astype(np_dtype)
+    xj = jnp.asarray(x)
+    lens = jnp.full((probe_batch,), padded_n, jnp.int32)
+    row_sort = local_sort if local_sort is not None else jnp.sort
+    candidates: dict[str, Callable] = {
+        "vmap": jax.jit(jax.vmap(row_sort)),
+        "pallas": lambda a: batched_kernels.batched_row_sort(
+            a, lens, method="bitonic", interpret=interpret
+        ),
+    }
+    if np.issubdtype(np_dtype, np.integer):
+        candidates["pallas2op"] = lambda a: batched_kernels.batched_row_sort(
+            a, lens, method="bitonic2op", interpret=interpret
+        )
+    timings: dict[str, float] = {}
+    for name, fn in candidates.items():
+        fn(xj).block_until_ready()  # warm: trace + compile outside the clock
+        best = math.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(xj).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        timings[name] = best
+    backend = min(timings, key=timings.get)  # type: ignore[arg-type]
+    detail = "row_backend=%s (autotuned @B%d: %s)" % (
+        backend,
+        probe_batch,
+        ", ".join(f"{k} {v * 1e3:.2f}ms" for k, v in timings.items()),
+    )
+    _ROW_BACKEND_CACHE[key] = (backend, detail)
+    return backend, detail
 
 
 def x64_enabled() -> bool:
@@ -332,6 +448,7 @@ def choose_batch_plan(
     *,
     margin: float = 1.25,
     bitonic_max: int = SEGMENT_BITONIC_MAX,
+    row_backend: str | None = None,
 ) -> SortPlan:
     """Plan ONE fused ``(B, padded_n)`` sim call for a segment batch.
 
@@ -340,12 +457,17 @@ def choose_batch_plan(
     point of coalescing — so the decisions left are the per-row kernel and
     one shared capacity:
 
-    * rows up to ``bitonic_max`` take the ``bitonic`` method — a direct
+    * rows up to ``bitonic_max`` take a bitonic method — a direct
       sentinel-padded row sort with **no** value partitioning.  At serving
       row sizes the P-way bucket machinery (O(L·P) rank matrix + scatter +
       P per-bucket sorts) costs an order of magnitude more device time than
       sorting the row outright, needs no capacity, and is immune to value
-      skew — the fused batch IS the parallelism;
+      skew — the fused batch IS the parallelism.  ``row_backend`` selects
+      the kernel (:data:`ROW_BACKENDS`): ``vmap`` → ``bitonic`` (vmapped
+      XLA sort, the default), ``pallas`` → ``bitonic_pallas`` (the fused
+      batched Pallas kernel), ``pallas2op`` → ``bitonic2op`` (its NICE
+      2-op stage); the engine feeds this from the
+      :func:`choose_row_backend` measured head-to-head;
     * longer rows run the paper's bucket path: ``sampled`` splitters when
       the worst row is skewed but not duplicate-dominated (quantile
       splitters cannot split one repeated value), else the equal-width
@@ -354,9 +476,13 @@ def choose_batch_plan(
       overflowing it.
     """
     if padded_n <= bitonic_max:
+        backend = row_backend or "vmap"
+        if backend not in _BACKEND_METHODS:
+            raise ValueError(f"row_backend {backend!r} not in {ROW_BACKENDS}")
         return SortPlan(
-            "sim", "bitonic", None, padded_n,
-            f"segmented bitonic rows (Lbucket={padded_n} ≤ {bitonic_max})",
+            "sim", _BACKEND_METHODS[backend], None, padded_n,
+            f"segmented bitonic rows (Lbucket={padded_n} ≤ {bitonic_max}), "
+            f"row_backend={backend}",
         )
     if stats is None:
         raise ValueError("choose_batch_plan needs stats for the bucket path")
@@ -608,31 +734,54 @@ class SortEngine:
     def _get_sim_fn(self, padded_n: int, capacity: int, method: str, dtype, batched: bool):
         key = ("batch" if batched else "sim", padded_n, capacity, method, str(dtype))
         fn = self._fn_cache.get(key)
-        if fn is None:
-            def traced(x_pad, n_valid):
-                self.trace_count += 1  # runs at trace time only
-                if method == "bitonic":
-                    # Direct sentinel-padded row sort (segmented batch rows,
-                    # DESIGN.md §8): pad cells carry the dtype max, which
-                    # sorts to the tail, so the valid prefix is exact even
-                    # when real keys equal the sentinel.  Counts are the
-                    # trivial per-row total — this kernel cannot overflow.
-                    return (
-                        self.local_sort(x_pad),
-                        jnp.reshape(n_valid.astype(jnp.int32), (1,)),
-                    )
-                return _sim_sort_padded(
-                    x_pad,
-                    n_valid,
-                    P=self.topo.total_procs,
-                    capacity=capacity,
-                    method=method,
-                    sample_size=min(self.sample_size, padded_n),
-                    local_sort=self.local_sort,
-                )
+        if fn is not None:
+            return fn
+        if method in ("bitonic_pallas", "bitonic2op"):
+            # The fused batched Pallas kernel (kernels/batched.py): ONE
+            # pallas_call whose grid IS the batch axis, sentinel-fill +
+            # sort + validity mask per row — no vmap wrapper, the whole
+            # (B, L) batch goes in.  Counts are the trivial per-row totals
+            # (same no-overflow contract as the vmapped bitonic method).
+            if not batched:
+                raise ValueError(f"method {method!r} is batch-only")
+            interpret = ops._auto_interpret(None)
+            kernel_method = "bitonic2op" if method == "bitonic2op" else "bitonic"
 
-            fn = jax.jit(jax.vmap(traced) if batched else traced)
+            def traced_batch(x_pad, n_valid):
+                self.trace_count += 1  # runs at trace time only
+                out = batched_kernels.batched_row_sort(
+                    x_pad, n_valid, method=kernel_method, interpret=interpret
+                )
+                return out, n_valid.astype(jnp.int32)[:, None]
+
+            fn = jax.jit(traced_batch)
             self._fn_cache[key] = fn
+            return fn
+
+        def traced(x_pad, n_valid):
+            self.trace_count += 1  # runs at trace time only
+            if method == "bitonic":
+                # Direct sentinel-padded row sort (segmented batch rows,
+                # DESIGN.md §8): pad cells carry the dtype max, which
+                # sorts to the tail, so the valid prefix is exact even
+                # when real keys equal the sentinel.  Counts are the
+                # trivial per-row total — this kernel cannot overflow.
+                return (
+                    self.local_sort(x_pad),
+                    jnp.reshape(n_valid.astype(jnp.int32), (1,)),
+                )
+            return _sim_sort_padded(
+                x_pad,
+                n_valid,
+                P=self.topo.total_procs,
+                capacity=capacity,
+                method=method,
+                sample_size=min(self.sample_size, padded_n),
+                local_sort=self.local_sort,
+            )
+
+        fn = jax.jit(jax.vmap(traced) if batched else traced)
+        self._fn_cache[key] = fn
         return fn
 
     # ------------------------------------------------------------------ sort
@@ -714,9 +863,18 @@ class SortEngine:
                 padded, lens,
                 num_buckets=min(self.topo.total_procs, _MAX_STAT_BUCKETS),
             )
-        return choose_batch_plan(
-            stats, self.topo.total_procs, padded_n, margin=self.margin
+            return choose_batch_plan(
+                stats, self.topo.total_procs, padded_n, margin=self.margin
+            )
+        backend, detail = choose_row_backend(
+            padded_n, keys.dtype, local_sort=self.local_sort,
+            batch_hint=int(lens.size),
         )
+        plan = choose_batch_plan(
+            None, self.topo.total_procs, padded_n,
+            margin=self.margin, row_backend=backend,
+        )
+        return dataclasses.replace(plan, reason=f"{plan.reason}; {detail}")
 
     def sort_segments(
         self, keys, seg_lens, *, plan: SortPlan | None = None,
@@ -807,10 +965,18 @@ class SortEngine:
         stats = None
         if plan is None:
             if padded_n <= SEGMENT_BITONIC_MAX:
-                # the bitonic row kernel needs no capacity → no stats pass
-                plan = choose_batch_plan(
-                    None, self.topo.total_procs, padded_n, margin=self.margin
+                # the bitonic row kernels need no capacity → no stats pass;
+                # the backend (vmap vs fused Pallas) comes from the cached
+                # measured head-to-head (or REPRO_ROW_BACKEND)
+                backend, detail = choose_row_backend(
+                    padded_n, keys.dtype, local_sort=self.local_sort,
+                    batch_hint=B_pad,
                 )
+                plan = choose_batch_plan(
+                    None, self.topo.total_procs, padded_n,
+                    margin=self.margin, row_backend=backend,
+                )
+                plan = dataclasses.replace(plan, reason=f"{plan.reason}; {detail}")
             else:
                 stats = estimate_batch_stats(
                     padded, lens_pad,
@@ -822,7 +988,7 @@ class SortEngine:
         if plan.path != "sim":
             raise ValueError(f"sort_segments only runs the sim path, got {plan.path!r}")
         method = plan.method
-        capacity = 0 if method == "bitonic" else (
+        capacity = 0 if method in BITONIC_METHODS else (
             plan.capacity
             or partition.default_capacity(padded_n, self.topo.total_procs)
         )
@@ -885,16 +1051,20 @@ class SortEngine:
         key = ("pairs", n_pad, str(keys.dtype), str(vals.dtype))
         fn = self._fn_cache.get(key)
         if fn is None:
-            def traced(k, v):
+            def traced(k, v, n_valid):
                 self.trace_count += 1
-                return ops.local_sort_pairs(k, v)
+                # n_valid is traced: the pre-pad below makes every length in
+                # the bucket look like n_pad to the kernel, so the validity
+                # boundary must ride along or pad zeros could displace real
+                # payloads on dtype-max key ties (the sentinel-tie hazard).
+                return ops.local_sort_pairs(k, v, n_valid=n_valid)
 
             fn = jax.jit(traced)
             self._fn_cache[key] = fn
         fill = _sim_fill(keys.dtype)
         kp = jnp.concatenate([keys, jnp.full((n_pad - n,), fill, keys.dtype)])
         vp = jnp.concatenate([vals, jnp.zeros((n_pad - n,), vals.dtype)])
-        ks, vs = fn(kp, vp)
+        ks, vs = fn(kp, vp, n)
         return ks[:n], vs[:n]
 
     # ------------------------------------------------------------------ dist

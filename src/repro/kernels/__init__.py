@@ -5,12 +5,15 @@ is the bucket histogram/scatter.  TPU-native equivalents (DESIGN.md §2):
 
 * ``bitonic``          — in-VMEM bitonic sort / pair-sort / two-tile merge
                          (reshape-based compare-exchange, zero gathers)
+* ``batched``          — fused batched segmented row sort: one pallas_call,
+                         grid over the batch axis, sentinel-fill + sort +
+                         validity mask per row (the serving hot path)
 * ``partition_kernel`` — bucket histogram + stable ranks (one-hot form,
                          sequential-grid running offsets)
 * ``ops``              — jit'd wrappers (interpret=True on CPU)
 * ``ref``              — pure-jnp oracles for the allclose tests
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import batched, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["batched", "ops", "ref"]

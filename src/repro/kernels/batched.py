@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: fused batched segmented row sort (DESIGN.md §2, §8).
+
+The engine's hottest serving primitive — ``sort_segments``' sentinel-padded
+``(B, Lbucket)`` row sort — as ONE ``pallas_call`` with the grid over the
+batch axis.  Each grid step sorts one row entirely in VMEM:
+
+* **sentinel-fill is fused**: the per-row valid length arrives as a
+  ``seg_lens`` scalar-prefetch operand (SMEM-resident, available before the
+  row's VMEM block streams in), and the kernel masks positions ``≥ len`` to
+  the dtype-max sentinel itself — whatever garbage the pad cells carry on
+  entry, so the host-side pad fill and the separate mask pass disappear;
+* the row then runs the same reshape-based compare-exchange network as
+  ``bitonic.py`` (zero gathers, every stage a full-width VPU op);
+* the masked fill doubles as the **validity mask** on the way out: pad
+  cells leave the kernel holding the sentinel, so row ``i``'s sorted
+  segment is exactly ``out[i, :seg_lens[i]]``.
+
+Two compare-exchange primitives are selectable per plan:
+
+* ``method="bitonic"`` — the classic 4-op stage (min, max, 2 selects);
+* ``method="bitonic2op"`` — Paeth's NICE-network "2-op" stage:
+  ``mn = min(a, b); mx = a + b - mn``.  The sum wraps modulo 2**w in
+  two's-complement, so ``a + b - mn`` is *exactly* ``max(a, b)`` for every
+  integer dtype — one op fewer per exchange and no select chain.  Floats
+  have no such identity (rounding breaks it), so float dtypes silently use
+  the 4-op stage; ``METHODS`` names both variants.
+
+``batched_row_sort_pairs`` is the (key, payload) variant for
+``sort_pairs``/MoE dispatch: validity rides as a tag bit through the
+lexicographic ``(tag, key)`` exchange (``bitonic._compare_exchange_tagged``),
+so pad slots sort strictly after real ones even when real keys equal the
+dtype-max sentinel — payloads cannot be lost to the pad tail.
+
+Rows must be power-of-two multiples of 128 lanes (``ops.bucketed_length``
+guarantees this for every engine caller); the batch axis is the grid, so
+any ``B ≥ 1`` works.  On CPU the kernels run with ``interpret=True``; on
+TPU they compile to Mosaic with the row block ``(1, L/128, 128)`` resident
+in VMEM (L ≤ ``SEGMENT_BITONIC_MAX`` = 8192 keeps a f32 row ≤ 32 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import bitonic
+from repro.kernels.bitonic import LANES, _log2
+
+__all__ = ["batched_row_sort", "batched_row_sort_pairs", "METHODS"]
+
+# The selectable compare-exchange variants (see module docstring).
+METHODS = ("bitonic", "bitonic2op")
+
+
+def _sentinel(dtype):
+    # typed scalar — a weak Python int overflows jnp.where for uint dtypes
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).max, dtype)
+    return jnp.array(jnp.inf, dtype)
+
+
+def _positions(r: int) -> jax.Array:
+    """Flat element positions of an ``(r, LANES)`` row view, 2-D iota only
+    (1-D iota does not lower on TPU)."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r, LANES), 1)
+    return row * LANES + lane
+
+
+def _compare_exchange_2op(x: jax.Array, s: int, j: int) -> jax.Array:
+    """Paeth NICE stage: ``mn = min(a,b); mx = a + b - mn`` (ints, exact
+    under modular wraparound).  Same reshape/direction scheme as
+    ``bitonic._compare_exchange``."""
+    n = x.shape[0]
+    d = 1 << j
+    y = x.reshape(n // (2 * d), 2, d)
+    a, b = y[:, 0, :], y[:, 1, :]
+    q = jnp.arange(n // (2 * d), dtype=jnp.int32)
+    asc = (((q >> (s - j)) & 1) == 0)[:, None]
+    mn = jnp.minimum(a, b)
+    mx = a + b - mn
+    lo = jnp.where(asc, mn, mx)
+    hi = jnp.where(asc, mx, mn)
+    return jnp.stack([lo, hi], axis=1).reshape(n)
+
+
+def _row_network(x: jax.Array, *, two_op: bool) -> jax.Array:
+    stage = (
+        _compare_exchange_2op
+        if two_op and jnp.issubdtype(x.dtype, jnp.integer)
+        else bitonic._compare_exchange
+    )
+    kbits = _log2(x.shape[0])
+    for s in range(kbits):
+        for j in range(s, -1, -1):
+            x = stage(x, s, j)
+    return x
+
+
+# ----------------------------------------------------------------- kernels
+def batched_row_sort_kernel(len_ref, x_ref, o_ref, *, two_op: bool):
+    """One grid step = one row: fused sentinel-fill + sort + validity mask."""
+    r = x_ref.shape[1]
+    n = r * LANES
+    length = len_ref[pl.program_id(0)]
+    pos = _positions(r)
+    x = jnp.where(pos < length, x_ref[0], _sentinel(x_ref.dtype))
+    o_ref[0] = _row_network(x.reshape(n), two_op=two_op).reshape(r, LANES)
+
+
+def batched_row_sort_pairs_kernel(len_ref, k_ref, v_ref, ok_ref, ov_ref):
+    """Pairs row sort; validity fused as the tag bit of the lexicographic
+    ``(tag, key)`` exchange — sentinel-tie safe by construction."""
+    r = k_ref.shape[1]
+    n = r * LANES
+    length = len_ref[pl.program_id(0)]
+    pos = _positions(r)
+    valid = pos < length
+    keys = jnp.where(valid, k_ref[0], _sentinel(k_ref.dtype)).reshape(n)
+    tags = (~valid).astype(jnp.int32).reshape(n)
+    vals = jnp.where(valid, v_ref[0], jnp.zeros((), v_ref.dtype)).reshape(n)
+    kbits = _log2(n)
+    for s in range(kbits):
+        for j in range(s, -1, -1):
+            keys, tags, vals = bitonic._compare_exchange_tagged(
+                keys, tags, vals, s, j
+            )
+    ok_ref[0] = keys.reshape(r, LANES)
+    ov_ref[0] = vals.reshape(r, LANES)
+
+
+# ------------------------------------------------------------ pallas_call
+def _row_block(b_shape: tuple[int, int]) -> tuple[int, int, int]:
+    B, L = b_shape
+    if L % LANES or L & (L - 1):
+        raise ValueError(f"row length {L} must be a power-of-two multiple of {LANES}")
+    return (1, L // LANES, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def batched_row_sort(
+    padded: jax.Array,
+    seg_lens: jax.Array,
+    *,
+    method: str = "bitonic",
+    interpret: bool = False,
+) -> jax.Array:
+    """Sort every row of ``padded (B, L)`` to its ``seg_lens`` valid length.
+
+    One ``pallas_call``, grid ``(B,)``, ``seg_lens`` scalar-prefetched:
+    row ``i`` of the result is ``sorted(padded[i, :seg_lens[i]])`` followed
+    by a dtype-max sentinel tail.  Pad-cell *input* contents are ignored —
+    the kernel refills them — so callers can pack rows with anything.
+    """
+    if method not in METHODS:
+        raise ValueError(f"method {method!r} not in {METHODS}")
+    B, L = padded.shape
+    block = _row_block((B, L))
+    r = block[1]
+    x3 = padded.reshape(B, r, LANES)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[pl.BlockSpec(block, lambda b, lens: (b, 0, 0))],
+        out_specs=pl.BlockSpec(block, lambda b, lens: (b, 0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(batched_row_sort_kernel, two_op=method == "bitonic2op"),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, r, LANES), padded.dtype),
+        interpret=interpret,
+    )(seg_lens.astype(jnp.int32), x3)
+    return out.reshape(B, L)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_row_sort_pairs(
+    keys: jax.Array,
+    vals: jax.Array,
+    seg_lens: jax.Array,
+    *,
+    interpret: bool = False,
+):
+    """Row-sort ``(B, L)`` key/payload pairs by key to ``seg_lens`` lengths.
+
+    Sentinel-tie safe: validity is a fused tag bit, so dtype-max keys keep
+    their payloads (the pad tail carries sentinel keys + zero payloads).
+    """
+    B, L = keys.shape
+    block = _row_block((B, L))
+    r = block[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[pl.BlockSpec(block, lambda b, lens: (b, 0, 0))] * 2,
+        out_specs=[pl.BlockSpec(block, lambda b, lens: (b, 0, 0))] * 2,
+    )
+    ok, ov = pl.pallas_call(
+        batched_row_sort_pairs_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, r, LANES), keys.dtype),
+            jax.ShapeDtypeStruct((B, r, LANES), vals.dtype),
+        ),
+        interpret=interpret,
+    )(
+        seg_lens.astype(jnp.int32),
+        keys.reshape(B, r, LANES),
+        vals.reshape(B, r, LANES),
+    )
+    return ok.reshape(B, L), ov.reshape(B, L)

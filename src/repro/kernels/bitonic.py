@@ -81,6 +81,35 @@ def _compare_exchange_pairs(k: jax.Array, v: jax.Array, s: int, j: int):
     )
 
 
+def _compare_exchange_tagged(k, t, v, s: int, j: int):
+    """Stage ordering by ``(tag, key)`` lexicographically, payload follows.
+
+    The tag is a validity bit (0 = real, 1 = pad): pad slots sort strictly
+    after *every* real slot — even when a real key equals the dtype-max pad
+    sentinel — so slicing ``[:n]`` can never trade a real payload for a
+    pad's zero payload.
+    """
+    n = k.shape[0]
+    d = 1 << j
+    ky = k.reshape(n // (2 * d), 2, d)
+    ty = t.reshape(n // (2 * d), 2, d)
+    vy = v.reshape(n // (2 * d), 2, d)
+    ka, kb = ky[:, 0, :], ky[:, 1, :]
+    ta, tb = ty[:, 0, :], ty[:, 1, :]
+    va, vb = vy[:, 0, :], vy[:, 1, :]
+    q = jnp.arange(n // (2 * d), dtype=jnp.int32)
+    asc = (((q >> (s - j)) & 1) == 0)[:, None]
+    a_gt_b = (ta > tb) | ((ta == tb) & (ka > kb))
+    a_lt_b = (ta < tb) | ((ta == tb) & (ka < kb))
+    swap = jnp.where(asc, a_gt_b, a_lt_b)
+    out = []
+    for xa, xb in ((ka, kb), (ta, tb), (va, vb)):
+        lo = jnp.where(swap, xb, xa)
+        hi = jnp.where(swap, xa, xb)
+        out.append(jnp.stack([lo, hi], axis=1).reshape(n))
+    return tuple(out)
+
+
 def _sort_network(x: jax.Array) -> jax.Array:
     kbits = _log2(x.shape[0])
     for s in range(kbits):
@@ -111,6 +140,20 @@ def bitonic_sort_pairs_kernel(k_ref, v_ref, ok_ref, ov_ref):
     for s in range(kbits):
         for j in range(s, -1, -1):
             keys, vals = _compare_exchange_pairs(keys, vals, s, j)
+    ok_ref[...] = keys.reshape(k_ref.shape)
+    ov_ref[...] = vals.reshape(v_ref.shape)
+
+
+def bitonic_sort_pairs_tagged_kernel(k_ref, t_ref, v_ref, ok_ref, ov_ref):
+    """Pairs sort on lexicographic ``(validity tag, key)`` — sentinel-safe."""
+    n = k_ref.shape[0] * k_ref.shape[1]
+    keys = k_ref[...].reshape(n)
+    tags = t_ref[...].reshape(n)
+    vals = v_ref[...].reshape(n)
+    kbits = _log2(n)
+    for s in range(kbits):
+        for j in range(s, -1, -1):
+            keys, tags, vals = _compare_exchange_tagged(keys, tags, vals, s, j)
     ok_ref[...] = keys.reshape(k_ref.shape)
     ov_ref[...] = vals.reshape(v_ref.shape)
 
@@ -162,6 +205,30 @@ def sort_pairs_tile(keys: jax.Array, vals: jax.Array, *, interpret: bool = False
         out_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
         interpret=interpret,
     )(keys.reshape(shape), vals.reshape(shape))
+    return ok.reshape(n), ov.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_pairs_tile_tagged(
+    keys: jax.Array, tags: jax.Array, vals: jax.Array, *, interpret: bool = False
+):
+    """Pairs sort with a validity tag (0 = real, 1 = pad) breaking key ties.
+
+    ``tags`` may be traced (e.g. ``arange(n) >= n_valid``), so one compiled
+    executable serves every valid length in a shape bucket.
+    """
+    n = keys.shape[0]
+    shape = _tile_shape(n)
+    ok, ov = pl.pallas_call(
+        bitonic_sort_pairs_tagged_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(shape, keys.dtype),
+            jax.ShapeDtypeStruct(shape, vals.dtype),
+        ),
+        in_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 3,
+        out_specs=[pl.BlockSpec(shape, lambda: (0, 0))] * 2,
+        interpret=interpret,
+    )(keys.reshape(shape), tags.reshape(shape), vals.reshape(shape))
     return ok.reshape(n), ov.reshape(n)
 
 

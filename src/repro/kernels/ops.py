@@ -73,28 +73,46 @@ def local_sort(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
         bitonic.sort_tile(xp[i * MAX_TILE : (i + 1) * MAX_TILE], interpret=interpret)
         for i in range(num_tiles)
     ]
-    for _ in range(num_tiles):  # odd-even transposition over blocks
-        for start in (0, 1):
-            for i in range(start, num_tiles - 1, 2):
-                lo, hi = bitonic.merge_tiles(tiles[i], tiles[i + 1], interpret=interpret)
-                tiles[i], tiles[i + 1] = lo, hi
+    # Odd-even transposition over sorted blocks: with the two-tile merge as
+    # comparator, ``num_tiles`` *alternating half-passes* (even, odd, even, …)
+    # already sort any block arrangement — a full even+odd pair per round
+    # would double the merge count for nothing.
+    for p in range(num_tiles):
+        for i in range(p % 2, num_tiles - 1, 2):
+            lo, hi = bitonic.merge_tiles(tiles[i], tiles[i + 1], interpret=interpret)
+            tiles[i], tiles[i + 1] = lo, hi
     return jnp.concatenate(tiles)[:n]
 
 
 def local_sort_pairs(
-    keys: jax.Array, vals: jax.Array, *, interpret: bool | None = None
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    n_valid: jax.Array | int | None = None,
+    interpret: bool | None = None,
 ):
-    """Sort (key, payload) pairs by key.  Single-tile sizes (≤ MAX_TILE)."""
+    """Sort (key, payload) pairs by key.  Single-tile sizes (≤ MAX_TILE).
+
+    Sentinel-safe: pad slots carry a validity tag that breaks key ties, so
+    real elements whose keys equal the dtype-max pad sentinel keep their
+    payloads ahead of the zero-payload pad tail (the ``[:n]`` slice can
+    never cut a real payload).  ``n_valid`` (default ``len(keys)``) marks
+    where validity ends when the caller pre-padded; it may be traced, so a
+    warm executable serves every length in the shape bucket.
+    """
     interpret = _auto_interpret(interpret)
     n = keys.shape[0]
     n_pad = bucketed_length(n)
     if n_pad > MAX_TILE:
         raise ValueError(f"local_sort_pairs supports n ≤ {MAX_TILE}, got {n}")
+    if n_valid is None:
+        n_valid = n
     kp = jnp.concatenate(
         [keys, jnp.full((n_pad - n,), _fill_value(keys.dtype), keys.dtype)]
     )
     vp = jnp.concatenate([vals, jnp.zeros((n_pad - n,), vals.dtype)])
-    ks, vs = bitonic.sort_pairs_tile(kp, vp, interpret=interpret)
+    tags = (jnp.arange(n_pad, dtype=jnp.int32) >= n_valid).astype(jnp.int32)
+    ks, vs = bitonic.sort_pairs_tile_tagged(kp, tags, vp, interpret=interpret)
     return ks[:n], vs[:n]
 
 
@@ -104,9 +122,12 @@ def bucket_count_rank(
     *,
     tile: int = 1024,
     interpret: bool | None = None,
+    debug: bool = False,
 ):
     """Histogram + stable in-bucket ranks (see partition_kernel)."""
-    return _bcr(ids, num_buckets, tile=tile, interpret=_auto_interpret(interpret))
+    return _bcr(
+        ids, num_buckets, tile=tile, interpret=_auto_interpret(interpret), debug=debug
+    )
 
 
 def make_local_sort(interpret: bool | None = None):

@@ -47,15 +47,43 @@ def bucket_count_rank_kernel(ids_ref, counts_ref, ranks_ref):
     counts_ref[...] = (base + jnp.sum(onehot, axis=0)).reshape(1, num_buckets)
 
 
-@functools.partial(jax.jit, static_argnames=("num_buckets", "tile", "interpret"))
 def bucket_count_rank(
-    ids: jax.Array, num_buckets: int, *, tile: int = 1024, interpret: bool = False
+    ids: jax.Array,
+    num_buckets: int,
+    *,
+    tile: int = 1024,
+    interpret: bool = False,
+    debug: bool = False,
 ):
     """Histogram + stable ranks for ``ids`` (flat int32 in [0, num_buckets)).
 
     Pads to a tile multiple internally; padded slots use bucket id
     ``num_buckets - 1`` but their ranks are discarded and counts corrected.
+    ``n == 0`` short-circuits to empty results (a ``grid=(0,)`` pallas_call
+    is ill-formed).  ``debug=True`` validates the id range eagerly on the
+    host (concrete inputs only — out-of-range ids otherwise match no
+    one-hot column and silently under-count).
     """
+    if ids.shape[0] == 0:
+        return (
+            jnp.zeros((num_buckets,), jnp.int32),
+            jnp.zeros((0,), jnp.int32),
+        )
+    if debug:
+        ids_np = jax.device_get(ids)
+        bad = (ids_np < 0) | (ids_np >= num_buckets)
+        if bad.any():
+            offenders = ids_np[bad][:8]
+            raise ValueError(
+                f"bucket ids out of range [0, {num_buckets}): {offenders!r}"
+            )
+    return _bucket_count_rank_impl(ids, num_buckets, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "tile", "interpret"))
+def _bucket_count_rank_impl(
+    ids: jax.Array, num_buckets: int, *, tile: int = 1024, interpret: bool = False
+):
     n = ids.shape[0]
     n_pad = -(-n // tile) * tile
     pad = n_pad - n

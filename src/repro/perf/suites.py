@@ -138,7 +138,39 @@ def _local_sort_setup(n: int):
     return setup
 
 
+def _rowsort_setup(backend: str, B: int, L: int):
+    """One segment-path row backend on a fixed full-range int32 batch:
+    ``vmap`` jits the vmapped XLA sort, the pallas backends call the fused
+    batched kernel (``repro.kernels.batched``) directly — same candidates
+    the engine's ``choose_row_backend`` autotune races."""
+
+    def setup():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import batched, ops
+
+        rng = np.random.default_rng(L)
+        info = np.iinfo(np.int32)
+        x = jnp.asarray(rng.integers(info.min, info.max, (B, L), dtype=np.int32))
+        if backend == "vmap":
+            f = jax.jit(jax.vmap(jnp.sort))
+            return lambda: f(x)
+        lens = jnp.full((B,), L, jnp.int32)
+        method = {"pallas": "bitonic", "pallas2op": "bitonic2op"}[backend]
+        interpret = ops._auto_interpret(None)
+        return lambda: batched.batched_row_sort(
+            x, lens, method=method, interpret=interpret
+        )
+
+    return setup
+
+
 def kernels_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    # The interpreted Pallas paths cost orders of magnitude more than the
+    # work model and a python-interpreted call swings run to run, so those
+    # cases carry the wide netsim-style band.
+    wide = {"lower": 0.70, "upper": 1.50}
     cases = [
         PerfCase(
             suite="kernels",
@@ -150,23 +182,49 @@ def kernels_cases(*, smoke: bool = True) -> "list[PerfCase]":
             suite="kernels",
             key="bitonic_interpret/4096",
             setup=_local_sort_setup(4096),
-            # the interpreted Pallas path costs orders of magnitude more
-            # than its work model — the ratio still gates, but a ~400us
-            # python-interpreted call swings ~2x run to run, so the band
-            # is wide like netsim's
+            # the ratio still gates, but the python-interpreted call
+            # swings ~2x run to run — wide band
             workload=_sort_workload(4096, 4),
-            lower=0.70,
-            upper=1.50,
+            **wide,
+        ),
+        # The row-backend A/B the engine's autotune stands on, persisted as
+        # paired baseline rows: the committed raw_s ratio documents which
+        # backend wins the B64xL1024 serving bucket on this host, and
+        # perfguard re-judges each side on every gate run
+        # (benchmarks/bench_kernels.py runs the same pair interleaved).
+        PerfCase(
+            suite="kernels",
+            key="rowsort_vmap/B64xL1024",
+            setup=_rowsort_setup("vmap", 64, 1024),
+            workload=_sort_workload(64 * 1024, 4),
+            **wide,
+        ),
+        PerfCase(
+            suite="kernels",
+            key="rowsort_pallas/B64xL1024",
+            setup=_rowsort_setup("pallas", 64, 1024),
+            workload=_sort_workload(64 * 1024, 4),
+            **wide,
         ),
     ]
     if not smoke:
-        cases.append(PerfCase(
-            suite="kernels",
-            key="jnp_sort/262144",
-            setup=_jnp_sort_setup(262144),
-            workload=_sort_workload(262144, 4),
-            smoke=False,
-        ))
+        cases += [
+            PerfCase(
+                suite="kernels",
+                key="jnp_sort/262144",
+                setup=_jnp_sort_setup(262144),
+                workload=_sort_workload(262144, 4),
+                smoke=False,
+            ),
+            PerfCase(
+                suite="kernels",
+                key="rowsort_pallas2op/B64xL1024",
+                setup=_rowsort_setup("pallas2op", 64, 1024),
+                workload=_sort_workload(64 * 1024, 4),
+                smoke=False,
+                **wide,
+            ),
+        ]
     return cases
 
 

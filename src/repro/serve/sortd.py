@@ -159,7 +159,10 @@ _NUDGE = _Nudge()
 
 
 class _BucketStats:
-    __slots__ = ("requests", "batches", "rows", "pad_cells", "valid_cells", "lat_s")
+    __slots__ = (
+        "requests", "batches", "rows", "pad_cells", "valid_cells", "lat_s",
+        "methods",
+    )
 
     def __init__(self, window: int):
         self.requests = 0
@@ -168,6 +171,10 @@ class _BucketStats:
         self.pad_cells = 0
         self.valid_cells = 0
         self.lat_s = collections.deque(maxlen=window)
+        # flush count per executed plan method (e.g. bitonic vs
+        # bitonic_pallas vs bitonic2op) — names the kernel the engine's
+        # row-backend autotune actually ran for this bucket's traffic
+        self.methods: dict[str, int] = {}
 
 
 class Sortd:
@@ -343,6 +350,7 @@ class Sortd:
                     "p50_ms": pct(b.lat_s, 50),
                     "p99_ms": pct(b.lat_s, 99),
                     "pad_waste": b.pad_cells / total_cells if total_cells else 0.0,
+                    "methods": dict(b.methods),
                 }
             return {
                 "completed": self._completed,
@@ -502,6 +510,8 @@ class Sortd:
                 else batch[0].keys
             )
             outs = self.engine.sort_segments(flat, lens)
+            plan = (self.engine.last_report or {}).get("plan")
+            method = getattr(plan, "method", None) or "?"
         except Exception as e:  # one bad batch must not kill its siblings' futures
             self._busy_s += time.monotonic() - t_busy0
             with self._lock:
@@ -525,6 +535,7 @@ class Sortd:
             b.valid_cells += int(sum(lens))
             b.pad_cells += len(batch) * bucket - int(sum(lens))
             b.lat_s.extend(lats)
+            b.methods[method] = b.methods.get(method, 0) + 1
         for p, out in zip(batch, outs):
             p.future.set_result(out)
         self._beat()  # heartbeat between flushes of a long backlog

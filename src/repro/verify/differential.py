@@ -28,7 +28,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import OHHCTopology, SortEngine, SortPlan, autotune_capacity
-from repro.verify.grid import Scenario
+from repro.verify.grid import Scenario, SegmentScenario
 
 
 @dataclasses.dataclass
@@ -73,6 +73,16 @@ class EngineCache:
             else:
                 self._meshes[axes] = Mesh(devs, ("data",))
         return self._meshes[axes]
+
+    def segment_engine(self) -> SortEngine:
+        """The shared single-box engine the segment cells run on (d_h=1 —
+        the segment path's method is forced per cell, so topology only
+        sizes the never-used bucket fallback)."""
+        key = (1, "full", False, 1)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self._engines[key] = SortEngine(OHHCTopology(1, "full"))
+        return eng
 
     def engine_for(self, sc: Scenario) -> SortEngine:
         mesh_axes = 2 if (sc.path == "dist" and sc.method == "hier") else 1
@@ -148,6 +158,81 @@ def run_scenario(
         sc, status, detail, sc.path, sc.method, capacity, retries,
         counts_sum, elapsed, out if keep_output else None,
     )
+
+
+def run_segment_scenario(
+    sc: SegmentScenario, engines: EngineCache, *, keep_output: bool = True
+) -> ScenarioResult:
+    """One segmented-batch cell: force the row-sort method through
+    ``sort_segments(plan=...)`` and oracle every row against ``np.sort``.
+
+    The stored output is the concatenation of the sorted segments, so the
+    cross-check asserts byte-agreement between the vmapped XLA backend and
+    both fused Pallas variants on the same batch.
+    """
+    from repro.kernels import ops
+
+    flat, lens = sc.make_batch()
+    eng = engines.segment_engine()
+    padded_n = ops.bucketed_length(max(lens) if lens else 1)
+    plan = SortPlan("sim", sc.method, None, padded_n, "verify segment grid")
+    t0 = time.perf_counter()
+    try:
+        outs = eng.sort_segments(flat, lens, plan=plan)
+    except Exception as e:  # an executor crash is a finding, not an abort
+        return ScenarioResult(
+            sc, "fail", f"error: {type(e).__name__}: {e}", "sim", sc.method,
+            None, 0, None, time.perf_counter() - t0,
+        )
+    elapsed = time.perf_counter() - t0
+    report = eng.last_report or {}
+    retries = int(report.get("overflow_retries", 0))
+    method = getattr(report.get("plan"), "method", sc.method)
+    status, detail = "pass", ""
+    oracle_rows = np.split(flat, np.cumsum(lens)[:-1]) if lens else []
+    for i, (seg, n) in enumerate(zip(outs, lens)):
+        seg = np.asarray(seg)
+        want = np.sort(oracle_rows[i])
+        if seg.dtype != flat.dtype:
+            status, detail = "fail", f"row {i}: dtype {flat.dtype} -> {seg.dtype}"
+            break
+        if seg.shape != (n,):
+            status, detail = "fail", f"row {i}: length {seg.size} != {n}"
+            break
+        if not np.array_equal(seg, want):
+            bad = int(np.flatnonzero(seg != want)[0])
+            status = "fail"
+            detail = (
+                f"row {i} oracle mismatch at {bad}: got {seg[bad]!r}, "
+                f"want {want[bad]!r}"
+            )
+            break
+    out_flat = (
+        np.concatenate([np.asarray(o) for o in outs]) if lens else np.zeros(0)
+    )
+    return ScenarioResult(
+        sc, status, detail, "sim", method, None, retries, None, elapsed,
+        out_flat if keep_output else None,
+    )
+
+
+def run_segment_grid(
+    scenarios: "Sequence[SegmentScenario]",
+    *,
+    keep_outputs: bool = True,
+    progress: "Callable[[ScenarioResult], None] | None" = None,
+    engines: "EngineCache | None" = None,
+) -> list[ScenarioResult]:
+    """Run every segment cell (same contract as :func:`run_grid`)."""
+    if engines is None:
+        engines = EngineCache(devices=1)
+    results = []
+    for sc in scenarios:
+        r = run_segment_scenario(sc, engines, keep_output=keep_outputs)
+        results.append(r)
+        if progress is not None:
+            progress(r)
+    return results
 
 
 def run_grid(

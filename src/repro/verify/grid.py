@@ -215,6 +215,115 @@ def tier1_grid() -> list[Scenario]:
     return out
 
 
+# ---------------------------------------------------------------- segments
+# The segmented-batch twin of the grid above: one SegmentScenario is one
+# forced (row-sort method × dtype × row class × length mix) cell of the
+# ``sort_segments`` hot path, covering every row backend the engine's
+# autotune can pick (vmapped XLA and both fused Pallas variants) so the
+# drift baseline owns the batched kernel too (DESIGN.md §7, §8).
+
+SEGMENT_METHODS = ("bitonic", "bitonic_pallas", "bitonic2op")
+
+# Row classes: uniform keys, dtype-max sentinel-tie mixes (the pad-collision
+# class the tagged kernels exist for), all-equal rows, reversed ramps.
+SEGMENT_ROW_CLASSES = ("random", "ties", "equal", "ramp")
+
+# Longest-row values straddling pow2 shape buckets (128 and 1024).
+SEGMENT_MAX_LENS = (100, 1000)
+
+SEGMENT_DTYPES = ("int32", "uint32", "float32")
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentScenario:
+    """One executable cell of the segmented-batch conformance grid."""
+
+    method: str  # forced row-sort method (SEGMENT_METHODS)
+    dtype: str
+    rows: str  # row class (SEGMENT_ROW_CLASSES)
+    max_len: int  # longest row; the pow2 bucket comes from bucketed_length
+    seed: int = 7
+
+    # the single-array grid's duck-typed surface (baseline + cross-check)
+    path = "sim"
+
+    @property
+    def scenario_id(self) -> str:
+        return f"seg/{self.method}/{self.dtype}/{self.rows}/L{self.max_len}"
+
+    @property
+    def group_id(self) -> str:
+        """Cells sharing it sort the same batch: every method must agree."""
+        return f"seg/{self.dtype}/{self.rows}/L{self.max_len}/s{self.seed}"
+
+    def make_batch(self) -> "tuple[np.ndarray, list[int]]":
+        """The flat keys + segment lengths for this cell (deterministic).
+
+        Lengths include the degenerate rows (0, 1) plus draws up to
+        ``max_len`` so the batch straddles intra-bucket variation.
+        """
+        rng = np.random.default_rng(self.seed + self.max_len)
+        lens = [0, 1, self.max_len] + [
+            int(v) for v in rng.integers(2, self.max_len + 1, 4)
+        ]
+        dt = np.dtype(self.dtype)
+        segs = []
+        for n in lens:
+            if self.rows == "random":
+                if np.issubdtype(dt, np.integer):
+                    info = np.iinfo(dt)
+                    segs.append(rng.integers(info.min, info.max, n, dtype=dt))
+                else:
+                    segs.append(rng.normal(size=n).astype(dt))
+            elif self.rows == "ties":
+                hi = np.iinfo(dt).max
+                segs.append(np.where(rng.random(n) < 0.5, hi, hi - 1).astype(dt))
+            elif self.rows == "equal":
+                segs.append(np.full(n, 42, dt))
+            elif self.rows == "ramp":
+                segs.append(np.arange(n, 0, -1).astype(dt))
+            else:
+                raise ValueError(f"unknown row class {self.rows!r}")
+        flat = np.concatenate(segs) if segs else np.zeros(0, dt)
+        return flat, lens
+
+
+def segment_prune_reason(sc: SegmentScenario) -> "str | None":
+    if sc.method not in SEGMENT_METHODS:
+        return f"unknown segment method {sc.method!r}"
+    if sc.rows not in SEGMENT_ROW_CLASSES:
+        return f"unknown row class {sc.rows!r}"
+    if sc.rows == "ties" and not np.issubdtype(np.dtype(sc.dtype), np.integer):
+        return "sentinel-tie rows are an integer-key class (float pad is +inf)"
+    return None
+
+
+def segment_smoke_grid() -> "list[SegmentScenario]":
+    """Every runnable segment cell: method × dtype × row class × length."""
+    out = []
+    for method, dtype, rows, max_len in itertools.product(
+        SEGMENT_METHODS, SEGMENT_DTYPES, SEGMENT_ROW_CLASSES, SEGMENT_MAX_LENS
+    ):
+        sc = SegmentScenario(method, dtype, rows, max_len)
+        if segment_prune_reason(sc) is None:
+            out.append(sc)
+    return out
+
+
+def segment_tier1_grid() -> "list[SegmentScenario]":
+    """Fast pytest subset: every method and row class at one size each."""
+    picked = [
+        SegmentScenario("bitonic", "int32", "random", 100),
+        SegmentScenario("bitonic_pallas", "int32", "ties", 100),
+        SegmentScenario("bitonic_pallas", "uint32", "random", 1000),
+        SegmentScenario("bitonic2op", "int32", "equal", 1000),
+        SegmentScenario("bitonic2op", "uint32", "ties", 100),
+        SegmentScenario("bitonic_pallas", "float32", "ramp", 1000),
+    ]
+    smoke_ids = {sc.scenario_id for sc in segment_smoke_grid()}
+    return [sc for sc in picked if sc.scenario_id in smoke_ids]
+
+
 def pruned_cells(
     scenarios: "Sequence[Scenario] | None" = None,
     *,

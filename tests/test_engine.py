@@ -388,6 +388,100 @@ def test_batch_plan_policy_bitonic_vs_bucket():
         choose_batch_plan(None, 36, big)
 
 
+def test_batch_plan_row_backend_mapping():
+    from repro.core import ROW_BACKENDS, choose_batch_plan
+
+    want = {"vmap": "bitonic", "pallas": "bitonic_pallas", "pallas2op": "bitonic2op"}
+    for backend in ROW_BACKENDS:
+        p = choose_batch_plan(None, 36, 1024, row_backend=backend)
+        assert p.method == want[backend]
+        assert p.capacity is None
+        assert f"row_backend={backend}" in p.reason
+    with pytest.raises(ValueError, match="row_backend"):
+        choose_batch_plan(None, 36, 1024, row_backend="cuda")
+
+
+def test_choose_row_backend_env_and_probe(monkeypatch):
+    from repro.core import ROW_BACKENDS, choose_row_backend
+    from repro.core import engine as engine_mod
+
+    # env override wins and skips the probe
+    monkeypatch.setenv("REPRO_ROW_BACKEND", "pallas2op")
+    backend, detail = choose_row_backend(256, np.int32)
+    assert backend == "pallas2op" and "forced" in detail
+    monkeypatch.setenv("REPRO_ROW_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_ROW_BACKEND"):
+        choose_row_backend(256, np.int32)
+    # the measured head-to-head: runs all candidates, caches per
+    # (padded_n, dtype, probe batch), returns a record for SortPlan.reason
+    monkeypatch.delenv("REPRO_ROW_BACKEND")
+    monkeypatch.setattr(engine_mod, "_ROW_BACKEND_CACHE", {})
+    backend, detail = choose_row_backend(128, np.int32, probe_batch=4, repeats=1)
+    assert backend in ROW_BACKENDS
+    assert "autotuned" in detail and "vmap" in detail and "pallas" in detail
+    assert engine_mod._ROW_BACKEND_CACHE[(128, "int32", 4)] == (backend, detail)
+    # the probe batch buckets to the serving batch (pow2, clamped): backend
+    # ranking flips with batch size, so the probe must match the serve
+    assert engine_mod._probe_batch_for(1) == 8
+    assert engine_mod._probe_batch_for(24) == 32
+    assert engine_mod._probe_batch_for(500) == 64
+    # float keys: no 2-op candidate (the modular max identity is int-only)
+    b2, d2 = choose_row_backend(128, np.float32, probe_batch=4, repeats=1)
+    assert b2 in ("vmap", "pallas") and "pallas2op" not in d2
+
+
+def test_sort_segments_pallas_backends(monkeypatch):
+    # forcing each backend through the env knob must route sort_segments
+    # through the fused kernel and stay oracle-exact, with the method
+    # visible in last_report (what sortd's metrics surface per bucket)
+    rng = np.random.default_rng(5)
+    lens = [0, 1, 100, 513, 1000]
+    arrs = [rng.integers(0, 1 << 30, n).astype(np.int32) for n in lens]
+    flat = np.concatenate(arrs)
+    for backend, method in (
+        ("pallas", "bitonic_pallas"), ("pallas2op", "bitonic2op")
+    ):
+        monkeypatch.setenv("REPRO_ROW_BACKEND", backend)
+        eng = SortEngine(TOPO)
+        outs = eng.sort_segments(flat, lens)
+        for a, o in zip(arrs, outs):
+            np.testing.assert_array_equal(o, np.sort(a))
+        assert eng.last_report["plan"].method == method
+        assert f"row_backend={backend}" in eng.last_report["plan"].reason
+        assert eng.last_report["overflow_retries"] == 0
+
+
+def test_sort_segments_sentinel_tie_rows(monkeypatch):
+    # dtype-max keys across every row backend: the valid prefix must keep
+    # exactly seg_len sentinels per row (lost-element regression guard)
+    hi = np.iinfo(np.int32).max
+    rng = np.random.default_rng(9)
+    arrs = [
+        np.full(300, hi, np.int32),
+        np.where(rng.random(777) < 0.5, hi, hi - 1).astype(np.int32),
+    ]
+    flat = np.concatenate(arrs)
+    for backend in ("vmap", "pallas", "pallas2op"):
+        monkeypatch.setenv("REPRO_ROW_BACKEND", backend)
+        eng = SortEngine(TOPO)
+        outs = eng.sort_segments(flat, [a.size for a in arrs])
+        for a, o in zip(arrs, outs):
+            np.testing.assert_array_equal(o, np.sort(a))
+
+
+def test_sort_pairs_sentinel_ties_engine():
+    # engine.sort_pairs pre-pads to the shape bucket before the traced fn;
+    # the traced n_valid must keep pad zeros from displacing real payloads
+    eng = SortEngine(TOPO)
+    hi = np.iinfo(np.int32).max
+    k = np.full(200, hi, np.int32)
+    k[::3] = hi - 1
+    v = np.arange(1, 201, dtype=np.int32)
+    ks, vs = eng.sort_pairs(k, v)
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(k))
+    np.testing.assert_array_equal(np.sort(np.asarray(vs)), v)
+
+
 def test_estimate_batch_stats_worst_row_scaled():
     from repro.core import estimate_batch_stats, pack_segments
 

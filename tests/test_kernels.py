@@ -54,6 +54,47 @@ def test_sort_pairs(n, rng):
         )
 
 
+@pytest.mark.parametrize("n", [10, 100, 129, 1000])
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int16])
+def test_sort_pairs_sentinel_ties(n, dtype, rng):
+    # Regression: keys equal to the dtype-max pad sentinel must not lose
+    # their payloads to the zero-padded tail when n < bucketed_length(n).
+    hi = np.iinfo(dtype).max
+    k = np.full(n, hi, dtype=dtype)
+    k[rng.random(n) < 0.5] = hi - 1  # mix of max and near-max keys
+    v = np.arange(1, n + 1, dtype=np.int32)  # payloads, none zero
+    ks, vs = ops.local_sort_pairs(jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(k))
+    # every real payload survives — the pad's zero payloads must not appear
+    np.testing.assert_array_equal(np.sort(np.asarray(vs)), v)
+
+
+def test_multi_tile_merge_minimal_passes(monkeypatch, rng):
+    # Block odd-even transposition needs exactly num_tiles alternating
+    # half-passes; adversarial reverse-sorted input makes every element
+    # travel the full distance, so any fewer passes would fail.
+    monkeypatch.setattr(ops, "MAX_TILE", 512)
+    for n in (1536, 2560, 4000):  # 3, 5, 8 tiles — odd counts included
+        x = np.arange(n, 0, -1).astype(np.int32)
+        out = ops.local_sort(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(out), np.sort(x))
+
+
+def test_bucket_count_rank_empty():
+    c, r = ops.bucket_count_rank(jnp.asarray(np.zeros(0, np.int32)), 4)
+    assert c.shape == (4,) and r.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(c), np.zeros(4, np.int32))
+
+
+def test_bucket_count_rank_out_of_range():
+    bad = jnp.asarray(np.array([0, 5, 1], np.int32))  # 5 ∉ [0, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        ops.bucket_count_rank(bad, 4, debug=True)
+    low = jnp.asarray(np.array([0, -1, 1], np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        ops.bucket_count_rank(low, 4, debug=True)
+
+
 @pytest.mark.parametrize("n,buckets,tile", [(100, 4, 32), (3000, 16, 1024), (257, 3, 64)])
 def test_bucket_count_rank(n, buckets, tile, rng):
     ids = rng.integers(0, buckets, n).astype(np.int32)

@@ -1,0 +1,150 @@
+"""Fused batched row-sort kernel vs the ``np.sort`` row oracle.
+
+Covers the ``kernels/batched.py`` contract the engine's segment path rides
+(DESIGN.md §2, §8): dtype sweep × row lengths straddling the pow2 shape
+buckets × adversarial row classes (all-equal and dtype-max sentinel-tie
+rows), both compare-exchange variants, plus the pairs kernel's
+payload-conservation guarantee.  The verify grid owns the same cells for
+drift detection (``repro.verify.grid.segment_smoke_grid``); these are the
+fast in-process checks.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import batched, ops
+
+
+def _pack(rows, L, dtype):
+    B = len(rows)
+    mat = np.zeros((B, L), dtype)
+    lens = np.zeros(B, np.int32)
+    for i, r in enumerate(rows):
+        mat[i, : len(r)] = r
+        lens[i] = len(r)
+    return mat, lens
+
+
+def _sentinel(dtype):
+    return np.iinfo(dtype).max if np.issubdtype(dtype, np.integer) else np.inf
+
+
+def _check_rows(out, rows, lens, dtype):
+    for b, r in enumerate(rows):
+        np.testing.assert_array_equal(out[b, : lens[b]], np.sort(r))
+        assert (out[b, lens[b] :] == _sentinel(dtype)).all()
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int16, np.float32])
+@pytest.mark.parametrize("method", ["bitonic", "bitonic2op"])
+def test_batched_row_sort_bucket_straddle(dtype, method, rng):
+    # lengths straddling the pow2 buckets: 127/128/129 around one boundary,
+    # plus 0, 1, and a full row — all packed into one L=256 batch
+    L = 256
+    lengths = [0, 1, 127, 128, 129, 255, 256]
+    rows = []
+    for n in lengths:
+        if np.issubdtype(dtype, np.integer):
+            info = np.iinfo(dtype)
+            rows.append(rng.integers(info.min, info.max, n).astype(dtype))
+        else:
+            rows.append(rng.normal(size=n).astype(dtype))
+    mat, lens = _pack(rows, L, dtype)
+    out = np.asarray(
+        batched.batched_row_sort(
+            jnp.asarray(mat), jnp.asarray(lens), method=method, interpret=True
+        )
+    )
+    _check_rows(out, rows, lens, dtype)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int16])
+def test_batched_row_sort_sentinel_and_equal_rows(dtype, rng):
+    # adversarial classes: all-equal rows, all-sentinel rows, and mixed
+    # sentinel-tie rows — the pad fill must stay distinguishable via length
+    hi = np.iinfo(dtype).max
+    L = 128
+    rows = [
+        np.full(100, hi, dtype),                     # every key == sentinel
+        np.full(77, 42, dtype),                      # all equal
+        np.where(rng.random(128) < 0.5, hi, hi - 1).astype(dtype),  # tie mix
+    ]
+    mat, lens = _pack(rows, L, dtype)
+    for method in batched.METHODS:
+        out = np.asarray(
+            batched.batched_row_sort(
+                jnp.asarray(mat), jnp.asarray(lens), method=method, interpret=True
+            )
+        )
+        _check_rows(out, rows, lens, dtype)
+
+
+@given(seed=st.integers(0, 1000), lbits=st.integers(7, 12))
+@settings(max_examples=10, deadline=None)
+def test_batched_row_sort_property(seed, lbits):
+    # random (B, L) batches over the serving bucket range vs the row oracle
+    rng = np.random.default_rng(seed)
+    L = 1 << lbits
+    B = int(rng.integers(1, 9))
+    mat = rng.integers(0, 1 << 30, (B, L)).astype(np.int32)
+    lens = rng.integers(0, L + 1, B).astype(np.int32)
+    method = ("bitonic", "bitonic2op")[seed % 2]
+    out = np.asarray(
+        batched.batched_row_sort(
+            jnp.asarray(mat), jnp.asarray(lens), method=method, interpret=True
+        )
+    )
+    for b in range(B):
+        np.testing.assert_array_equal(
+            out[b, : lens[b]], np.sort(mat[b, : lens[b]])
+        )
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32])
+def test_batched_row_sort_pairs_conserves_payloads(dtype, rng):
+    # pairs variant: payloads survive sentinel-tie rows (the bug class the
+    # tagged compare-exchange exists for) and pair with their keys
+    hi = np.iinfo(dtype).max
+    B, L = 5, 256
+    k = np.where(rng.random((B, L)) < 0.5, hi, hi - 1).astype(dtype)
+    v = rng.integers(1, 1 << 30, (B, L)).astype(np.int32)
+    lens = np.array([256, 0, 100, 255, 1], np.int32)
+    ok, ov = batched.batched_row_sort_pairs(
+        jnp.asarray(k), jnp.asarray(v), jnp.asarray(lens), interpret=True
+    )
+    ok, ov = np.asarray(ok), np.asarray(ov)
+    for b in range(B):
+        n = lens[b]
+        np.testing.assert_array_equal(ok[b, :n], np.sort(k[b, :n]))
+        # payload multiset conserved per row, zeros only in the pad tail
+        np.testing.assert_array_equal(np.sort(ov[b, :n]), np.sort(v[b, :n]))
+        assert (ov[b, n:] == 0).all()
+        # key-consistent pairing inside each key group (bitonic is unstable)
+        for key in np.unique(k[b, :n]):
+            np.testing.assert_array_equal(
+                np.sort(ov[b, :n][ok[b, :n] == key]),
+                np.sort(v[b, :n][k[b, :n] == key]),
+            )
+
+
+def test_batched_row_sort_rejects_bad_shapes(rng):
+    x = jnp.zeros((2, 192), jnp.int32)  # 192 not a pow2 multiple of 128
+    with pytest.raises(ValueError, match="power-of-two"):
+        batched.batched_row_sort(x, jnp.zeros((2,), jnp.int32), interpret=True)
+    with pytest.raises(ValueError, match="method"):
+        batched.batched_row_sort(
+            jnp.zeros((2, 128), jnp.int32),
+            jnp.zeros((2,), jnp.int32),
+            method="nope",
+            interpret=True,
+        )
+
+
+def test_engine_buckets_are_kernel_compatible():
+    # every engine row bucket the segment path can emit is a valid kernel
+    # shape — the routing contract between ops.bucketed_length and batched
+    for n in (1, 100, 128, 1000, 8192):
+        L = ops.bucketed_length(n)
+        assert L % 128 == 0 and L & (L - 1) == 0

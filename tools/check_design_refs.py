@@ -9,7 +9,8 @@ Three checks, all exiting non-zero with a listing on failure:
 2. **Symbol coverage**: every section in ``SYMBOL_SECTIONS`` must mention
    the full public surface it owns — the module's ``__all__`` (parsed
    with ``ast``, so new exports automatically demand coverage) plus
-   listed extras.  Currently §8 ↔ ``repro.serve.sortd`` (serving layer),
+   listed extras.  Currently §2 ↔ ``repro.kernels.batched`` (fused
+   batched row sort), §8 ↔ ``repro.serve.sortd`` (serving layer),
    §9 ↔ ``repro.perf`` (perf gate), and §10 ↔ ``repro.serve.fleet``
    (multi-worker serving).
 3. **Intra-repo markdown links**: every relative ``[text](target)`` link
@@ -48,6 +49,14 @@ MD_GLOBS = ("docs/*.md",)
 # every name in the module's ``__all__`` (parsed with ``ast``, so a new
 # export without documentation fails this check) plus the listed extras.
 SYMBOL_SECTIONS = {
+    2: (
+        "src/repro/kernels/batched.py",  # fused batched row sort
+        (
+            "local_sort_pairs",
+            "sort_pairs_tile_tagged",
+            "bucket_count_rank",
+        ),
+    ),
     8: (
         "src/repro/serve/sortd.py",  # serving layer
         (
@@ -59,6 +68,10 @@ SYMBOL_SECTIONS = {
             "SEGMENT_BITONIC_MAX",
             "pack_segments",
             "unpack_segments",
+            "ROW_BACKENDS",
+            "choose_row_backend",
+            "REPRO_ROW_BACKEND",
+            "SegmentScenario",
         ),
     ),
     9: (

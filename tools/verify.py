@@ -173,15 +173,19 @@ def main(argv=None) -> int:
     if args.full:
         mode = "full"
         scenarios = grid.full_grid(devices=args.devices, mesh_axes=mesh_axes)
+        segments = grid.segment_smoke_grid()
     elif args.tier1:
         mode = "tier1"
         scenarios = grid.tier1_grid()
+        segments = grid.segment_tier1_grid()
     else:
         mode = "smoke"
         scenarios = grid.smoke_grid(devices=args.devices, mesh_axes=mesh_axes)
+        segments = grid.segment_smoke_grid()
     pruned = grid.pruned_cells(devices=args.devices, mesh_axes=mesh_axes)
     if args.filter:
         scenarios = [sc for sc in scenarios if args.filter in sc.scenario_id]
+        segments = [sc for sc in segments if args.filter in sc.scenario_id]
 
     baseline_path = pathlib.Path(
         args.baseline
@@ -211,18 +215,26 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     done = {"n": 0}
+    total = len(scenarios) + len(segments)
 
     def progress(r):
         done["n"] += 1
         if not args.quiet and (r.status != "pass" or done["n"] % 25 == 0):
             print(
-                f"[{done['n']:4d}/{len(scenarios)}] {r.status:4s} "
+                f"[{done['n']:4d}/{total}] {r.status:4s} "
                 f"{r.scenario_id}  {r.detail}",
                 flush=True,
             )
 
+    engines = differential.EngineCache(devices=args.devices)
     results = differential.run_grid(
-        scenarios, devices=args.devices, progress=progress
+        scenarios, devices=args.devices, progress=progress, engines=engines
+    )
+    # Segmented-batch cells ride the same result stream: cross_check then
+    # asserts byte-agreement between the vmapped row backend and both fused
+    # Pallas variants (shared group_id), and the baseline gates their drift.
+    results += differential.run_segment_grid(
+        segments, progress=progress, engines=engines
     )
     mismatches = differential.cross_check(results)
     fails = [r for r in results if r.status != "pass"]
