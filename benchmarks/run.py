@@ -26,6 +26,7 @@ from benchmarks import (
     bench_counters,
     bench_efficiency,
     bench_engine,
+    bench_faults,
     bench_fleet,
     bench_kernels,
     bench_moe_dispatch,
@@ -71,6 +72,7 @@ SUITES = {
         chaos=a.chaos,
         report=a.fleet_report,
     ),
+    "faults": lambda a: bench_faults.run(a.paper),  # degraded serving (§11)
 }
 
 

@@ -406,6 +406,13 @@ class SortPlan:
     # (repro.net, DESIGN.md §6) for this request's size — the measured-
     # timeline comm-cost estimate attached to dispatch decisions.
     comm_sim_s: float | None = None
+    # Degraded serving (DESIGN.md §11): the active FaultScenario's name, and
+    # — when the degraded gather is still possible — the netsim-predicted
+    # gather slowdown (degraded/healthy, barrier accounting).  A fault that
+    # makes the gather impossible rewrites the whole plan onto the healthy
+    # host path instead and leaves fault_slowdown None.
+    fault: str | None = None
+    fault_slowdown: float | None = None
 
 
 def autotune_capacity(
@@ -653,6 +660,12 @@ class SortEngine:
     host_threshold:  sizes ≥ this go to the exact numpy path.
     local_sort:      per-bucket sorter for the sim path (default
                      ``jnp.sort``; pass ``ops.make_local_sort()`` on TPU).
+    fault_scenario:  optional ``net.faults.FaultScenario`` the engine serves
+                     under (DESIGN.md §11): plans re-price the gather over
+                     the degraded topology (``SortPlan.fault_slowdown``) and
+                     an impossible scenario rewrites plans onto the healthy
+                     host path — results stay exact either way.  Switch at
+                     runtime with :meth:`set_fault_scenario`.
     """
 
     def __init__(
@@ -665,6 +678,7 @@ class SortEngine:
         sample_size: int = 2048,
         margin: float = 1.25,
         local_sort: Callable[[jax.Array], jax.Array] | None = None,
+        fault_scenario=None,
     ):
         self.topo = topo if topo is not None else OHHCTopology(1, "full")
         self.mesh = mesh
@@ -673,10 +687,93 @@ class SortEngine:
         self.sample_size = int(sample_size)
         self.margin = float(margin)
         self.local_sort = local_sort if local_sort is not None else jnp.sort
+        self.fault_scenario = fault_scenario
         self._fn_cache: dict[tuple, Callable] = {}
         self._comm_sim_cache: dict[tuple, float] = {}
+        # per-scenario-name degraded classification (rebuilt rounds or the
+        # GatherImpossible verdict) — warm like the caches it sits next to
+        self._fault_info: dict[str, dict] = {}
         self.trace_count = 0  # incremented once per actual jit trace
         self.last_report: dict | None = None
+
+    # ---------------------------------------------------------------- faults
+    def set_fault_scenario(self, scenario) -> None:
+        """Switch the engine onto (or off, with ``None``) a degraded
+        topology.  Classification is cached per scenario *name*, the jit
+        cache is untouched (the sorted output is fault-independent), and
+        only plan pricing/pathing changes — so flapping scenarios never
+        recompile (DESIGN.md §11)."""
+        self.fault_scenario = scenario
+
+    def _fault_state(self) -> "dict | None":
+        """The active scenario classified: ``None`` when healthy, else a
+        dict with ``impossible`` (bool), the scenario, and either the
+        rebuilt degraded rounds + faulted router (possible) or the
+        :class:`~repro.net.faults.GatherImpossible` detail + offending
+        node set (impossible)."""
+        sc = self.fault_scenario
+        if sc is None or not getattr(sc, "is_degraded", False):
+            return None
+        info = self._fault_info.get(sc.name)
+        if info is None:
+            from repro.net.faults import GatherImpossible, degraded_gather_rounds
+
+            try:
+                rounds = degraded_gather_rounds(self.topo, sc)
+            except GatherImpossible as e:
+                info = {
+                    "impossible": True,
+                    "scenario": sc,
+                    "detail": str(e),
+                    "nodes": tuple(sorted(e.nodes)),
+                }
+            else:
+                info = {
+                    "impossible": False,
+                    "scenario": sc,
+                    "rounds": rounds,
+                    "router": sc.router(self.topo),
+                }
+            self._fault_info[sc.name] = info
+        return info
+
+    def _apply_fault(self, plan: SortPlan, *, n: int, itemsize: int) -> SortPlan:
+        """The fallback ladder (DESIGN.md §11): healthy → plan unchanged;
+        degraded-but-possible → same path, gather re-priced over the
+        rebuilt schedule (predicted slowdown lands in the reason and, for
+        dist, in ``comm_sim_s``); impossible → the plan is rewritten onto
+        the healthy host path, which needs no interconnect gather."""
+        info = self._fault_state()
+        if info is None:
+            return plan
+        name = info["scenario"].name
+        if info["impossible"]:
+            if plan.path == "host":
+                return dataclasses.replace(
+                    plan,
+                    fault=name,
+                    reason=f"{plan.reason}; fault={name}: degraded gather "
+                    "impossible, host path unaffected",
+                )
+            return SortPlan(
+                "host", "paper", None, None,
+                f"fault={name}: degraded gather impossible "
+                f"({info['detail']}); falling back to the healthy host path",
+                fault=name,
+            )
+        healthy = self._comm_price(n, itemsize, None)
+        degraded = self._comm_price(n, itemsize, info)
+        ratio = degraded / healthy if healthy > 0 else 1.0
+        plan = dataclasses.replace(
+            plan,
+            fault=name,
+            fault_slowdown=ratio,
+            reason=f"{plan.reason}; fault={name}: predicted "
+            f"×{ratio:.2f} gather slowdown",
+        )
+        if plan.path == "dist":
+            plan = dataclasses.replace(plan, comm_sim_s=degraded)
+        return plan
 
     # -------------------------------------------------------------- planning
     def stats(self, x) -> InputStats:
@@ -701,7 +798,43 @@ class SortEngine:
                     stats.n, itemsize=np.dtype(stats.dtype).itemsize
                 ),
             )
-        return plan
+        return self._apply_fault(
+            plan, n=stats.n, itemsize=np.dtype(stats.dtype).itemsize
+        )
+
+    def _comm_price(self, n: int, itemsize: int, fault_info: "dict | None") -> float:
+        """Barrier-mode gather time for one pow2 bucket, healthy
+        (``fault_info=None``) or over a rebuilt degraded schedule — one
+        cache, keyed by (bucket, itemsize, scenario name)."""
+        from repro.net.links import LinkModel
+        from repro.net.sim import simulate_gather, simulate_schedule
+
+        bucket = ops.bucketed_length(max(2, n))
+        name = None if fault_info is None else fault_info["scenario"].name
+        key = ("netsim", bucket, itemsize, name)
+        t = self._comm_sim_cache.get(key)
+        if t is None:
+            chunk = -(-bucket // self.topo.total_procs)
+            if fault_info is None:
+                t = simulate_gather(
+                    self.topo,
+                    link_model=LinkModel(),
+                    chunk_sizes=chunk,
+                    itemsize=itemsize,
+                    barrier=True,
+                ).total_time_s
+            else:
+                t = simulate_schedule(
+                    fault_info["rounds"],
+                    self.topo,
+                    link_model=LinkModel(),
+                    router=fault_info["router"],
+                    chunk_sizes=chunk,
+                    itemsize=itemsize,
+                    barrier=True,
+                ).total_time_s
+            self._comm_sim_cache[key] = t
+        return t
 
     def comm_cost_estimate(self, n: int, itemsize: int = 4) -> float:
         """Simulated one-way gather time (s) for an ``n``-element request.
@@ -710,25 +843,15 @@ class SortEngine:
         this engine's topology with even ``n/P`` chunks — the link-level
         comm-cost estimate the dist path attaches to its dispatch
         decisions.  Cached per pow2 size bucket so the estimate is as warm
-        as the jit cache it sits next to.
+        as the jit cache it sits next to.  Under an active (and possible)
+        fault scenario the price is the *degraded* schedule's (DESIGN.md
+        §11); an impossible scenario prices healthy — the fallback ladder
+        never runs the gather there.
         """
-        from repro.net.links import LinkModel
-        from repro.net.sim import simulate_gather
-
-        bucket = ops.bucketed_length(max(2, n))
-        key = ("netsim", bucket, itemsize)
-        t = self._comm_sim_cache.get(key)
-        if t is None:
-            chunk = -(-bucket // self.topo.total_procs)
-            t = simulate_gather(
-                self.topo,
-                link_model=LinkModel(),
-                chunk_sizes=chunk,
-                itemsize=itemsize,
-                barrier=True,
-            ).total_time_s
-            self._comm_sim_cache[key] = t
-        return t
+        info = self._fault_state()
+        if info is not None and info["impossible"]:
+            info = None
+        return self._comm_price(n, itemsize, info)
 
     # -------------------------------------------------------------- jit cache
     def _get_sim_fn(self, padded_n: int, capacity: int, method: str, dtype, batched: bool):
@@ -804,7 +927,13 @@ class SortEngine:
         stats = None
         if plan is None:
             stats = self.stats(x_np)
-            plan = self.plan(x_np, stats)
+            plan = self.plan(x_np, stats)  # fault ladder applied inside
+        else:
+            # Forced plans go through the same ladder: an impossible
+            # scenario rewrites even an explicit sim/dist plan onto the
+            # healthy host path — that override IS the degraded-serving
+            # contract (zero wrong answers, DESIGN.md §11).
+            plan = self._apply_fault(plan, n=n, itemsize=x_np.dtype.itemsize)
         if plan.path == "host":
             r = ohhc_sort_host(x_np, self.topo, method=plan.method)
             self.last_report = {
@@ -935,6 +1064,31 @@ class SortEngine:
                 "n": total, "batch": B, "overflow_retries": 0,
             }
             return outs
+        fault_info = self._fault_state()
+        if fault_info is not None and fault_info["impossible"]:
+            # The batched twin of the 64-bit host fallback above: an
+            # impossible scenario has no degraded gather to run, so serve
+            # the batch exactly on the healthy host path (DESIGN.md §11).
+            if return_padded:
+                raise ValueError(
+                    "return_padded needs the jit path; fault scenario "
+                    f"{fault_info['scenario'].name!r} makes the degraded "
+                    "gather impossible and forces the host fallback"
+                )
+            outs = [
+                np.sort(seg)
+                for seg in np.split(keys, np.cumsum(lens)[:-1])
+            ] if B else []
+            self.last_report = {
+                "plan": SortPlan(
+                    "host", "paper", None, None,
+                    f"fault={fault_info['scenario'].name}: degraded gather "
+                    f"impossible ({fault_info['detail']}); exact host fallback",
+                    fault=fault_info["scenario"].name,
+                ),
+                "n": total, "batch": B, "overflow_retries": 0,
+            }
+            return outs
         padded_n = ops.bucketed_length(max(max_n, 1))
         if B == 0 or max_n <= 1:
             # Nothing to sort row-wise; keep the trivial case off the device.
@@ -985,6 +1139,10 @@ class SortEngine:
                 plan = choose_batch_plan(
                     stats, self.topo.total_procs, padded_n, margin=self.margin
                 )
+        # Degraded-but-possible scenario: same fused sim path, plan
+        # annotated with the predicted gather slowdown (impossible was
+        # already rerouted to the host fallback above).
+        plan = self._apply_fault(plan, n=max(total, 1), itemsize=keys.dtype.itemsize)
         if plan.path != "sim":
             raise ValueError(f"sort_segments only runs the sim path, got {plan.path!r}")
         method = plan.method
@@ -1007,7 +1165,9 @@ class SortEngine:
             capacity += (-capacity) % 8
             retries += 1
         self.last_report = {
-            "plan": SortPlan("sim", method, capacity, padded_n, plan.reason),
+            "plan": dataclasses.replace(
+                plan, capacity=capacity if method not in BITONIC_METHODS else None
+            ),
             "n": total, "stats": stats, "batch": B, "batch_padded": B_pad,
             "overflow_retries": retries,
             "pad_cells": B * padded_n - total,  # pad-waste the metrics layer reports

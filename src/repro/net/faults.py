@@ -34,16 +34,36 @@ silently dropping a subtree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import random
+from typing import Iterable, Sequence
 
 from repro.core.schedule import AccumulationSchedule, Send
 from repro.core.topology import OHHCTopology
 
 from repro.net.router import RouteError, Router
 
+__all__ = [
+    "GatherImpossible",
+    "FaultScenario",
+    "rebuild_degraded",
+    "degraded_gather_rounds",
+    "predicted_slowdown",
+]
+
 
 class GatherImpossible(RuntimeError):
-    """The fault set breaks the accumulation tree beyond rerouting."""
+    """The fault set breaks the accumulation tree beyond rerouting.
+
+    ``nodes`` carries the offending *global ids* — the failed internal
+    destinations, or the live nodes the fault set cut off from their
+    scheduled destination — so callers can act on **which** part of the
+    tree broke (the engine's fallback ladder, the fleet's worker mapping,
+    tests) instead of parsing the message.
+    """
+
+    def __init__(self, message: str, *, nodes: Iterable[int] = ()):
+        super().__init__(message)
+        self.nodes = frozenset(int(n) for n in nodes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +73,11 @@ class FaultScenario:
     name: str = "healthy"
     failed_links: tuple = ()  # ((g, l), (g, l)) pairs, either order
     failed_nodes: tuple = ()  # (g, l) addresses
+
+    @property
+    def is_degraded(self) -> bool:
+        """True when the scenario actually removes links or nodes."""
+        return bool(self.failed_links or self.failed_nodes)
 
     def router(self, topo: OHHCTopology) -> Router:
         links = [
@@ -96,6 +121,45 @@ class FaultScenario:
             failed_nodes=((w, 0),),
         )
 
+    @classmethod
+    def group_uplinks_down(cls, topo: OHHCTopology, g: int) -> "FaultScenario":
+        """Every OTIS uplink of group ``g`` dead: the group stays
+        electrically intact but optically islanded, so no payload can leave
+        it — the canonical scenario :func:`rebuild_degraded` must refuse
+        with the group's node set (it cannot be rerouted around)."""
+        links = []
+        for l in range(topo.procs_per_group):
+            partner = topo.optical_partner(g, l)
+            if partner is not None:
+                links.append(((g, l), partner))
+        if not links:
+            raise ValueError(f"group {g} has no OTIS uplinks in this topology")
+        return cls(name=f"uplinks_g{g}_down", failed_links=tuple(links))
+
+    @classmethod
+    def random_links(
+        cls, topo: OHHCTopology, k: int, *, seed: int = 0
+    ) -> "FaultScenario":
+        """Seeded uniform draw of ``k`` dead links over the full (sorted)
+        electrical+optical edge list — the k-link scenario axis the degraded
+        verify grid, the property tests, and ``bench_faults`` share.  Same
+        ``(topo, k, seed)`` ⇒ same scenario, on any host."""
+        edges = sorted(
+            {(min(a, b), max(a, b)) for a, b in topo.electrical_edges()}
+            | {(min(a, b), max(a, b)) for a, b in topo.optical_edges()}
+        )
+        if not 0 <= k <= len(edges):
+            raise ValueError(
+                f"k={k} outside [0, {len(edges)}] links of this topology"
+            )
+        chosen = random.Random(seed).sample(edges, k)
+        return cls(
+            name=f"klinks{k}_s{seed}",
+            failed_links=tuple(
+                (topo.addr(a), topo.addr(b)) for a, b in sorted(chosen)
+            ),
+        )
+
 
 def rebuild_degraded(
     schedule: "AccumulationSchedule | Sequence[Sequence[Send]]",
@@ -110,6 +174,13 @@ def rebuild_degraded(
     later rounds — which depend on the payload's arrival — stay later).
     Sends *from* a failed leaf node are dropped (data loss, reported by the
     simulator); a failed internal node raises :class:`GatherImpossible`.
+
+    The impossible verdict is all-at-once, never partial: before any
+    rewriting, every send is checked for a live route, and a fault set that
+    strands *any* live sender (e.g. all of a group's uplinks dead) raises
+    :class:`GatherImpossible` whose ``nodes`` is the full cut-off
+    component — not a partial schedule, and not a one-send message for a
+    many-node disconnection.
     """
     rounds = (
         schedule.rounds
@@ -124,8 +195,36 @@ def rebuild_degraded(
         if internal:
             raise GatherImpossible(
                 f"failed node(s) {sorted(internal)} are accumulation-tree "
-                "destinations; the gather cannot complete as scheduled"
+                "destinations; the gather cannot complete as scheduled",
+                nodes=internal,
             )
+
+    # Routability pre-pass: find every send the fault set strands, and
+    # raise ONCE with the union of their cut-off components.
+    stranded: set[int] = set()
+    examples: list[str] = []
+    for rnd in rounds:
+        for s in rnd:
+            src = topo.global_id(*s.src)
+            dst = topo.global_id(*s.dst)
+            if src in failed or src == dst:
+                continue
+            if router.link_kind(src, dst) is not None:
+                continue
+            try:
+                router.shortest_path(src, dst)
+            except RouteError:
+                # the whole component around src is what the faults islanded
+                stranded |= router.component(src)
+                if len(examples) < 3:
+                    examples.append(f"{s.src}→{s.dst} ({s.phase})")
+    if stranded:
+        raise GatherImpossible(
+            f"fault set cuts node(s) {sorted(stranded)} off from their "
+            f"scheduled destination (e.g. {', '.join(examples)}); "
+            "the gather cannot be rerouted",
+            nodes=stranded,
+        )
 
     out: list[tuple[Send, ...]] = []
     for rnd in rounds:
@@ -136,15 +235,13 @@ def rebuild_degraded(
             dst = topo.global_id(*s.dst)
             if src in failed:
                 continue  # dead leaf: its payload is lost, gather degrades
-            if router.link_kind(src, dst) is not None:
+            if src == dst or router.link_kind(src, dst) is not None:
+                # self-sends deliver in place in the simulator; never let
+                # one fall through to shortest_path's empty hop list (a
+                # zero-hop "relay chain" would silently drop the send)
                 direct.append(s)
                 continue
-            try:
-                hops = router.shortest_path(src, dst)
-            except RouteError as e:
-                raise GatherImpossible(
-                    f"no reroute for {s.src}→{s.dst} ({s.phase}): {e}"
-                ) from e
+            hops = router.shortest_path(src, dst)  # pre-pass proved it routes
             relay_chains.append(
                 [
                     Send(topo.addr(u), topo.addr(v), kind, f"{s.phase}+reroute")
@@ -169,3 +266,48 @@ def degraded_gather_rounds(
     return rebuild_degraded(
         AccumulationSchedule.build(topo), topo, scenario.router(topo)
     )
+
+
+def predicted_slowdown(
+    topo: OHHCTopology,
+    scenario: FaultScenario,
+    *,
+    chunk_sizes: "int | Sequence[int]",
+    itemsize: int = 4,
+    link_model=None,
+    barrier: bool = True,
+) -> tuple[float, float, float]:
+    """``(healthy_s, degraded_s, ratio)`` for one gather under ``scenario``.
+
+    Both sides run the event-driven simulator (``repro.net.sim``) over the
+    same chunk sizes: the healthy side on the paper schedule, the degraded
+    side on :func:`rebuild_degraded`'s rewrite with the scenario's faulted
+    router.  ``barrier=True`` is the paper's BSP accounting — the number
+    the engine quotes as *predicted* slowdown in ``SortPlan.reason`` and
+    ``bench_faults`` gates the *measured* (dependency-mode, contention-
+    aware) ratio against.  Raises :class:`GatherImpossible` when the
+    scenario cannot gather at all.
+    """
+    from repro.net.links import LinkModel
+    from repro.net.sim import simulate_gather, simulate_schedule
+
+    lm = link_model if link_model is not None else LinkModel()
+    healthy = simulate_gather(
+        topo,
+        link_model=lm,
+        chunk_sizes=chunk_sizes,
+        itemsize=itemsize,
+        barrier=barrier,
+    ).total_time_s
+    router = scenario.router(topo)
+    rounds = rebuild_degraded(AccumulationSchedule.build(topo), topo, router)
+    degraded = simulate_schedule(
+        rounds,
+        topo,
+        link_model=lm,
+        router=router,
+        chunk_sizes=chunk_sizes,
+        itemsize=itemsize,
+        barrier=barrier,
+    ).total_time_s
+    return healthy, degraded, degraded / healthy

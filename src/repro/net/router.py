@@ -123,6 +123,12 @@ class Router:
         hops.reverse()
         return hops
 
+    def component(self, gid: int) -> frozenset:
+        """Live nodes reachable from ``gid`` (itself included) — the island
+        a fault set strands a sender on (``net.faults`` reports it whole)."""
+        dist, _ = self._bfs(gid)
+        return frozenset(dist)
+
     # ---- graph metrics ------------------------------------------------------
     def is_connected(self) -> bool:
         live = [g for g in self.adjacency if g not in self.failed_nodes]

@@ -244,6 +244,9 @@ class SortdFleet:
         # chaos arming
         self._chaos_killed: "int | None" = None
         self._chaos_stalled: "int | None" = None
+        # degraded serving (DESIGN.md §11)
+        self._fault_scenario: "FaultScenario | None" = None
+        self._fault_summary: "dict | None" = None
         if start:
             self.start()
 
@@ -477,6 +480,70 @@ class SortdFleet:
         else:
             self._dispatch(job)
 
+    # ---------------------------------------------------------------- faults
+    def apply_fault_scenario(self, scenario: "FaultScenario | None") -> dict:
+        """Map a simulator-side ``FaultScenario`` onto the live fleet
+        (DESIGN.md §11) — the serving end of the ``net.faults`` vocabulary.
+
+        Worker-hub node faults ``(w, 0)`` with ``w < workers`` become real
+        worker deaths: the victim is crashed through the SAME
+        ``Sortd.kill()`` path ``ChaosConfig`` uses, so the health monitor's
+        drain-and-readmit failover serves its backlog (and chaos kills and
+        simulated topology faults are literally one code path).  Every
+        remaining link/node fault is the *residual* scenario, forwarded to
+        each surviving worker's engine — subsequent flushes re-price their
+        plans over the degraded topology, or fall back to the healthy host
+        path when the residual gather is impossible.  ``None`` heals the
+        engines (dead workers stay dead — failover is not undone).
+
+        Returns (and records in ``report()``) a summary dict:
+        ``{"scenario", "killed_workers", "residual_faults"}``.
+        """
+        killed: "list[int]" = []
+        residual = scenario
+        if scenario is not None:
+            killed = sorted(
+                g for g, l in scenario.failed_nodes
+                if l == 0 and 0 <= g < self.config.workers
+            )
+            residual = self._residual_scenario(scenario, killed)
+        for w in self._workers:
+            if w.wid not in killed:
+                w.sortd.set_fault_scenario(residual)
+        for wid in killed:
+            self.kill_worker(wid)
+        summary = {
+            "scenario": None if scenario is None else scenario.name,
+            "killed_workers": killed,
+            "residual_faults": 0 if residual is None else (
+                len(residual.failed_links) + len(residual.failed_nodes)
+            ),
+        }
+        with self._lock:
+            self._fault_scenario = scenario
+            self._fault_summary = None if scenario is None else summary
+        return summary
+
+    @staticmethod
+    def _residual_scenario(
+        scenario: FaultScenario, killed: "Sequence[int]"
+    ) -> "FaultScenario | None":
+        """The scenario minus the killed worker hubs and their links — what
+        the *surviving* workers' engines must still serve under."""
+        if not killed:
+            return scenario if scenario.is_degraded else None
+        hubs = {(w, 0) for w in killed}
+        links = tuple(
+            (a, b) for a, b in scenario.failed_links
+            if tuple(a) not in hubs and tuple(b) not in hubs
+        )
+        nodes = tuple(n for n in scenario.failed_nodes if tuple(n) not in hubs)
+        if not links and not nodes:
+            return None
+        return dataclasses.replace(
+            scenario, failed_links=links, failed_nodes=nodes
+        )
+
     # ---------------------------------------------------------------- chaos
     def _maybe_trigger_chaos(self) -> None:
         # under _lock, on the admitting client thread
@@ -491,7 +558,9 @@ class SortdFleet:
             victim = self._chaos_victim(c.kill_worker)
             if victim is not None:
                 self._chaos_killed = victim
-                self._workers[victim].sortd.kill()
+                # The kill goes through the FaultScenario mapping — chaos
+                # and simulated topology faults are one code path (§11).
+                self.apply_fault_scenario(c.scenario(victim))
         if (
             c.stall_worker_ms > 0.0
             and self._chaos_stalled is None
@@ -547,6 +616,7 @@ class SortdFleet:
                 workers[str(w.wid)] = {
                     "state": w.state.value,
                     "dead_reason": w.dead_reason,
+                    "fault": getattr(w.engine.fault_scenario, "name", None),
                     "admitted": w.admitted,
                     "completed": w.completed,
                     "inflight": len(w.inflight),
@@ -567,6 +637,9 @@ class SortdFleet:
                     "steals": self._steals,
                     "failovers": self._failovers,
                     "readmitted": self._readmitted,
+                    "fault_scenario": getattr(
+                        self._fault_scenario, "name", None
+                    ),
                     "latency_ms": {
                         "p50": pct(self._lat_s, 50),
                         "p99": pct(self._lat_s, 99),
@@ -613,6 +686,7 @@ class SortdFleet:
                 "idle_flush_s": self.config.worker_config.idle_flush_s,
             },
             "chaos": chaos,
+            "faults": self._fault_summary,
             **m,
         }
 

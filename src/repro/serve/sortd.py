@@ -214,6 +214,8 @@ class Sortd:
         self._oversize_direct = 0
         self._rejected = 0
         self._failed = 0
+        self._fault_name: "str | None" = None
+        self._degraded_flushes = 0  # flushes served under an active fault
         self._flushes = {"full": 0, "deadline": 0, "idle": 0, "close": 0}
         self._max_queue_depth = 0
         self._buckets: dict[str, _BucketStats] = {}
@@ -284,6 +286,26 @@ class Sortd:
         """Register ``fn()`` to run on the worker thread each loop iteration
         and after every flush — the fleet heartbeat/chaos-injection seam."""
         self._tick_hooks.append(fn)
+
+    def set_fault_scenario(self, scenario) -> None:
+        """Serve under a degraded topology (DESIGN.md §11).
+
+        Forwards a ``net.faults.FaultScenario`` (or ``None`` to heal) to
+        the engine, whose fallback ladder does the actual work: flushes
+        re-price their plans over the degraded schedule, and a scenario
+        that makes the gather impossible reroutes every flush onto the
+        healthy host path instead of erroring — callers see correct
+        results either way, ``metrics()`` sees which scenario is live and
+        how many flushes it degraded.  Safe from any thread: the engine
+        reads the scenario once per plan, on the worker thread.
+        """
+        self.engine.set_fault_scenario(scenario)
+        with self._lock:
+            self._fault_name = (
+                scenario.name
+                if scenario is not None and getattr(scenario, "is_degraded", False)
+                else None
+            )
 
     def backlog(self) -> int:
         """Requests accepted but not yet served (queued + binned).
@@ -357,6 +379,8 @@ class Sortd:
                 "failed": self._failed,
                 "oversize_direct": self._oversize_direct,
                 "rejected": self._rejected,
+                "fault_scenario": self._fault_name,
+                "degraded_flushes": self._degraded_flushes,
                 "flushes": dict(self._flushes),
                 "queue_depth": self._queue.qsize(),
                 "max_queue_depth": self._max_queue_depth,
@@ -512,6 +536,7 @@ class Sortd:
             outs = self.engine.sort_segments(flat, lens)
             plan = (self.engine.last_report or {}).get("plan")
             method = getattr(plan, "method", None) or "?"
+            fault = getattr(plan, "fault", None)
         except Exception as e:  # one bad batch must not kill its siblings' futures
             self._busy_s += time.monotonic() - t_busy0
             with self._lock:
@@ -526,6 +551,8 @@ class Sortd:
         # and immediately reads metrics() must see these requests counted.
         with self._lock:
             self._flushes[reason] += 1
+            if fault is not None:
+                self._degraded_flushes += 1
             self._completed += len(batch)
             self._all_lat_s.extend(lats)
             b = self._bucket_stats(f"{dtype_str}/{bucket}")

@@ -20,13 +20,22 @@ from repro.verify.grid import (
     DIMS,
     DTYPES,
     SIZE_BUCKETS,
+    FaultCell,
     Scenario,
+    fault_grid,
     full_grid,
     prune_reason,
     smoke_grid,
     tier1_grid,
 )
-from repro.verify.differential import ScenarioResult, cross_check, run_grid, run_scenario
+from repro.verify.differential import (
+    ScenarioResult,
+    cross_check,
+    run_fault_grid,
+    run_fault_scenario,
+    run_grid,
+    run_scenario,
+)
 from repro.verify.properties import (
     fault_replay,
     metamorphic_checks,
@@ -44,13 +53,17 @@ __all__ = [
     "DIMS",
     "DTYPES",
     "SIZE_BUCKETS",
+    "FaultCell",
     "Scenario",
+    "fault_grid",
     "full_grid",
     "prune_reason",
     "smoke_grid",
     "tier1_grid",
     "ScenarioResult",
     "cross_check",
+    "run_fault_grid",
+    "run_fault_scenario",
     "run_grid",
     "run_scenario",
     "fault_replay",

@@ -28,7 +28,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import OHHCTopology, SortEngine, SortPlan, autotune_capacity
-from repro.verify.grid import Scenario, SegmentScenario
+from repro.verify.grid import FAULT_IMPOSSIBLE, FaultCell, Scenario, SegmentScenario
 
 
 @dataclasses.dataclass
@@ -82,6 +82,19 @@ class EngineCache:
         eng = self._engines.get(key)
         if eng is None:
             eng = self._engines[key] = SortEngine(OHHCTopology(1, "full"))
+        return eng
+
+    def fault_engine(self, cell: FaultCell) -> SortEngine:
+        """One engine per fault-grid topology, *shared across fault
+        classes* — the degraded grid deliberately switches scenarios on a
+        warm engine so stale-plan bugs (DESIGN.md §11) would surface as
+        wrong cells here, not just in the unit tests."""
+        key = ("fault", cell.d_h, cell.variant)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self._engines[key] = SortEngine(
+                OHHCTopology(cell.d_h, cell.variant)
+            )
         return eng
 
     def engine_for(self, sc: Scenario) -> SortEngine:
@@ -229,6 +242,100 @@ def run_segment_grid(
     results = []
     for sc in scenarios:
         r = run_segment_scenario(sc, engines, keep_output=keep_outputs)
+        results.append(r)
+        if progress is not None:
+            progress(r)
+    return results
+
+
+def run_fault_scenario(
+    cell: FaultCell, engines: EngineCache, *, keep_output: bool = True
+) -> ScenarioResult:
+    """One degraded-topology cell: set the engine's fault scenario, force
+    the requested (path, method), and oracle the result.
+
+    The pins beyond the oracle (DESIGN.md §11):
+
+    * a degraded-but-possible scenario must *execute* on the requested
+      path with the plan annotated (``plan.fault`` + predicted slowdown);
+    * an impossible scenario (``FAULT_IMPOSSIBLE``) forced onto ``sim``
+      must come back on the typed host fallback — never an error, never
+      a wrong answer;
+    * the recorded ``path`` is the *executed* one, so the committed
+      baseline pins which rung of the fallback ladder every cell lands on.
+    """
+    x = cell.make_input()
+    oracle = np.sort(x)
+    eng = engines.fault_engine(cell)
+    t0 = time.perf_counter()
+    try:
+        scenario = cell.scenario(eng.topo)
+        eng.set_fault_scenario(scenario)
+        plan = forced_plan(eng, cell, x)
+        out = eng.sort(x, plan=plan)
+    except Exception as e:  # an executor crash is a finding, not an abort
+        return ScenarioResult(
+            cell, "fail", f"error: {type(e).__name__}: {e}", cell.path,
+            cell.method, None, 0, None, time.perf_counter() - t0,
+        )
+    finally:
+        eng.set_fault_scenario(None)  # engines are shared; never leak faults
+    elapsed = time.perf_counter() - t0
+    report = eng.last_report or {}
+    executed = report.get("plan")
+    path = getattr(executed, "path", cell.path)
+    method = getattr(executed, "method", cell.method)
+    fault_name = getattr(executed, "fault", None)
+    capacity = report.get("capacity_used", plan.capacity)
+    retries = int(report.get("overflow_retries", 0))
+    counts_sum = report.get("counts_sum")
+    counts_sum = int(counts_sum) if counts_sum is not None else None
+
+    out = np.asarray(out)
+    impossible = cell.fault in FAULT_IMPOSSIBLE
+    if out.dtype != x.dtype:
+        status, detail = "fail", f"dtype changed: {x.dtype} -> {out.dtype}"
+    elif out.shape != oracle.shape:
+        status, detail = "fail", f"shape changed: {oracle.shape} -> {out.shape}"
+    elif not np.array_equal(out, oracle):
+        bad = int(np.flatnonzero(out != oracle)[0])
+        status = "fail"
+        detail = (
+            f"oracle mismatch at index {bad}: got {out[bad]!r}, "
+            f"want {oracle[bad]!r}"
+        )
+    elif counts_sum is not None and counts_sum != x.size:
+        status, detail = "fail", f"element accounting: counts_sum={counts_sum} != n={x.size}"
+    elif scenario is not None and fault_name != scenario.name:
+        status = "fail"
+        detail = f"plan not annotated: plan.fault={fault_name!r}, want {scenario.name!r}"
+    elif impossible and cell.path == "sim" and path != "host":
+        status = "fail"
+        detail = f"impossible scenario executed on {path!r}, want host fallback"
+    elif scenario is not None and not impossible and path != cell.path:
+        status = "fail"
+        detail = f"possible scenario bumped off {cell.path!r} onto {path!r}"
+    else:
+        status, detail = "pass", ""
+    return ScenarioResult(
+        cell, status, detail, path, method, capacity, retries,
+        counts_sum, elapsed, out if keep_output else None,
+    )
+
+
+def run_fault_grid(
+    cells: "Sequence[FaultCell]",
+    *,
+    keep_outputs: bool = True,
+    progress: "Callable[[ScenarioResult], None] | None" = None,
+    engines: "EngineCache | None" = None,
+) -> list[ScenarioResult]:
+    """Run every degraded-grid cell (same contract as :func:`run_grid`)."""
+    if engines is None:
+        engines = EngineCache(devices=1)
+    results = []
+    for cell in cells:
+        r = run_fault_scenario(cell, engines, keep_output=keep_outputs)
         results.append(r)
         if progress is not None:
             progress(r)

@@ -324,6 +324,92 @@ def segment_tier1_grid() -> "list[SegmentScenario]":
     return [sc for sc in picked if sc.scenario_id in smoke_ids]
 
 
+# ------------------------------------------------------------------ faults
+# The degraded-topology slice of the grid (DESIGN.md §11): one FaultCell is
+# one (fault class × topology × path) cell run with the engine's
+# ``fault_scenario`` set.  Cells sharing a topology sort the *same* input,
+# so the cross-check asserts the degraded runs (and the typed host
+# fallbacks of impossible scenarios) stay byte-identical to the healthy
+# run — the "zero wrong answers under faults" pin.
+
+# healthy  — scenario None, the byte-reference the others must match;
+# optical  — group 1's OTIS uplink dead (reroutable: relay chains);
+# klinks2  — 2 seeded-random dead links (reroutable on every grid topo);
+# uplinks  — every OTIS uplink of group 1 dead (GatherImpossible: the
+#            group is optically islanded → typed host fallback);
+# worker   — group 1's hub node dead (GatherImpossible: internal
+#            destination → typed host fallback; the fleet's kill twin).
+FAULT_CLASSES = ("healthy", "optical", "klinks2", "uplinks", "worker")
+
+# Fault classes whose gather is impossible: forced sim plans must come back
+# rewritten to the host path (the fallback ladder's bottom rung).
+FAULT_IMPOSSIBLE = ("uplinks", "worker")
+
+FAULT_TOPOLOGIES = ((1, "full"), (2, "full"), (1, "half"))
+
+FAULT_PATHS = ("sim", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultCell:
+    """One executable cell of the degraded-topology conformance grid."""
+
+    fault: str  # FAULT_CLASSES
+    d_h: int
+    variant: str
+    path: str  # requested path; the *executed* path lands in the baseline
+    n: int = 2048
+    seed: int = 11
+
+    # the single-array grid's duck-typed surface (forced_plan + baselines)
+    method = "paper"
+
+    @property
+    def scenario_id(self) -> str:
+        var = "" if self.variant == "full" else f"-{self.variant}"
+        return f"fault/{self.fault}/d{self.d_h}{var}/{self.path}"
+
+    @property
+    def group_id(self) -> str:
+        """Same topology ⇒ same input: every fault class and path in the
+        group must agree byte-for-byte with the healthy cell."""
+        var = "" if self.variant == "full" else f"-{self.variant}"
+        return f"fault/d{self.d_h}{var}/n{self.n}/s{self.seed}"
+
+    def make_input(self) -> np.ndarray:
+        from repro.data.distributions import make_array
+
+        return make_array("random", self.n, seed=self.seed, dtype=np.dtype("int32"))
+
+    def scenario(self, topo):
+        """The cell's FaultScenario on ``topo`` (None for the healthy ref)."""
+        from repro.net.faults import FaultScenario
+
+        if self.fault == "healthy":
+            return None
+        if self.fault == "optical":
+            return FaultScenario.optical_link_down(1)
+        if self.fault == "klinks2":
+            return FaultScenario.random_links(topo, 2, seed=3)
+        if self.fault == "uplinks":
+            return FaultScenario.group_uplinks_down(topo, 1)
+        if self.fault == "worker":
+            return FaultScenario.worker_down(1)
+        raise ValueError(f"unknown fault class {self.fault!r}")
+
+
+def fault_grid() -> "list[FaultCell]":
+    """Every degraded-grid cell: fault class × topology × path (no pruning
+    — every class is constructible on every grid topology, and impossible
+    scenarios are *cells that must fall back*, not cells to skip)."""
+    return [
+        FaultCell(fault, d_h, variant, path)
+        for fault in FAULT_CLASSES
+        for d_h, variant in FAULT_TOPOLOGIES
+        for path in FAULT_PATHS
+    ]
+
+
 def pruned_cells(
     scenarios: "Sequence[Scenario] | None" = None,
     *,

@@ -40,6 +40,7 @@ SUITE_NAMES = (
     "verify",
     "sortd",
     "fleet",
+    "faults",
 )
 
 

@@ -11,8 +11,9 @@ Three checks, all exiting non-zero with a listing on failure:
    with ``ast``, so new exports automatically demand coverage) plus
    listed extras.  Currently §2 ↔ ``repro.kernels.batched`` (fused
    batched row sort), §8 ↔ ``repro.serve.sortd`` (serving layer),
-   §9 ↔ ``repro.perf`` (perf gate), and §10 ↔ ``repro.serve.fleet``
-   (multi-worker serving).
+   §9 ↔ ``repro.perf`` (perf gate), §10 ↔ ``repro.serve.fleet``
+   (multi-worker serving), and §11 ↔ ``repro.net.faults`` (degraded
+   serving).
 3. **Intra-repo markdown links**: every relative ``[text](target)`` link
    in the top-level docs, ``docs/``, and ``benchmarks/README.md`` must
    point at an existing file (external ``http(s)``/``mailto`` links and
@@ -92,6 +93,21 @@ SYMBOL_SECTIONS = {
             "drive_open_loop",
             "worker_down",
             "idle_flush_s",
+        ),
+    ),
+    11: (
+        "src/repro/net/faults.py",  # degraded serving
+        (
+            "set_fault_scenario",
+            "apply_fault_scenario",
+            "fault_slowdown",
+            "is_degraded",
+            "optical_link_down",
+            "group_uplinks_down",
+            "random_links",
+            "worker_down",
+            "degraded_flushes",
+            "fault_grid",
         ),
     ),
 }

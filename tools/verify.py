@@ -46,6 +46,10 @@ def parse_args(argv=None):
     mode.add_argument("--sortd", action="store_true",
                       help="sortd serving-layer smoke slice (DESIGN.md §8): "
                       "live micro-batching service vs the np.sort oracle")
+    mode.add_argument("--degraded", action="store_true",
+                      help="degraded-topology slice only (DESIGN.md §11): "
+                      "the fault grid + fault properties, drift-gated "
+                      "against the committed smoke baseline")
     ap.add_argument("--devices", type=int, default=1,
                     help="XLA host device count (>1 unlocks dist scenarios)")
     ap.add_argument("--filter", default=None,
@@ -174,32 +178,43 @@ def main(argv=None) -> int:
         mode = "full"
         scenarios = grid.full_grid(devices=args.devices, mesh_axes=mesh_axes)
         segments = grid.segment_smoke_grid()
+        faults = grid.fault_grid()
     elif args.tier1:
         mode = "tier1"
         scenarios = grid.tier1_grid()
         segments = grid.segment_tier1_grid()
+        faults = []
+    elif args.degraded:
+        # The fault slice alone (fast CI lane): its cells are a subset of
+        # the committed smoke baseline, so the drift gate still applies.
+        mode = "degraded"
+        scenarios = []
+        segments = []
+        faults = grid.fault_grid()
     else:
         mode = "smoke"
         scenarios = grid.smoke_grid(devices=args.devices, mesh_axes=mesh_axes)
         segments = grid.segment_smoke_grid()
+        faults = grid.fault_grid()
     pruned = grid.pruned_cells(devices=args.devices, mesh_axes=mesh_axes)
     if args.filter:
         scenarios = [sc for sc in scenarios if args.filter in sc.scenario_id]
         segments = [sc for sc in segments if args.filter in sc.scenario_id]
+        faults = [sc for sc in faults if args.filter in sc.scenario_id]
 
     baseline_path = pathlib.Path(
         args.baseline
         if args.baseline
-        else (DEFAULT_BASELINE if mode in ("smoke", "tier1") else "")
+        else (DEFAULT_BASELINE if mode in ("smoke", "tier1", "degraded") else "")
         or f"verify_{mode}_baseline.json"
     )
     # The committed smoke baseline records the devices=1 grid; gate against
-    # it only when this run executes that same grid (or a filtered/tier1
-    # subset of it) — a multi-device sweep adds dist cells the baseline
-    # legitimately doesn't carry, which is coverage, not drift.
-    subset_run = bool(args.filter) or mode == "tier1"
+    # it only when this run executes that same grid (or a filtered/tier1/
+    # degraded subset of it) — a multi-device sweep adds dist cells the
+    # baseline legitimately doesn't carry, which is coverage, not drift.
+    subset_run = bool(args.filter) or mode in ("tier1", "degraded")
     comparable = args.baseline is not None or (
-        mode in ("smoke", "tier1") and args.devices == 1
+        mode in ("smoke", "tier1", "degraded") and args.devices == 1
     )
     if args.update_baseline and baseline_path.resolve() == DEFAULT_BASELINE.resolve() and (
         subset_run or args.devices != 1 or mode != "smoke"
@@ -215,7 +230,7 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     done = {"n": 0}
-    total = len(scenarios) + len(segments)
+    total = len(scenarios) + len(segments) + len(faults)
 
     def progress(r):
         done["n"] += 1
@@ -236,6 +251,12 @@ def main(argv=None) -> int:
     results += differential.run_segment_grid(
         segments, progress=progress, engines=engines
     )
+    # Degraded-topology cells too (DESIGN.md §11): each topology's healthy
+    # cell anchors a cross-check group, so every degraded run and typed
+    # host fallback must match its bytes exactly.
+    results += differential.run_fault_grid(
+        faults, progress=progress, engines=engines
+    )
     mismatches = differential.cross_check(results)
     fails = [r for r in results if r.status != "pass"]
 
@@ -243,16 +264,17 @@ def main(argv=None) -> int:
     if not args.skip_properties:
         topo = OHHCTopology(1, "full")
         eng = SortEngine(topo)
-        for dist in ("random", "sorted", "dupes", "local"):
-            for dtype in ("int32", "uint32"):
-                x = make_array(dist, 1024, seed=11, dtype=np.dtype(dtype))
-                prop_results += properties.metamorphic_checks(
-                    eng, x, subject=f"{dtype}/{dist}"
-                )
-        keys = make_array("dupes", 500, seed=5)
-        prop_results += properties.pairs_pairing_check(
-            eng, keys, np.arange(keys.size, dtype=np.int32), subject="int32/dupes"
-        )
+        if mode != "degraded":  # the fault lane runs only the fault battery
+            for dist in ("random", "sorted", "dupes", "local"):
+                for dtype in ("int32", "uint32"):
+                    x = make_array(dist, 1024, seed=11, dtype=np.dtype(dtype))
+                    prop_results += properties.metamorphic_checks(
+                        eng, x, subject=f"{dtype}/{dist}"
+                    )
+            keys = make_array("dupes", 500, seed=5)
+            prop_results += properties.pairs_pairing_check(
+                eng, keys, np.arange(keys.size, dtype=np.int32), subject="int32/dupes"
+            )
         x = make_array("local", 2048, seed=9)
         prop_results += properties.fault_replay_for_engine_run(eng, x)
         for d_h in (1, 2):
