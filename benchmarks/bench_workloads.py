@@ -1,0 +1,145 @@
+"""Workload-layer benchmarks (DESIGN.md §12): top-k vs full sort, the
+streaming-merge tick vs a full re-sort, pytree vs flat payload sort, and
+the MoE dispatch before/after (``sorted`` one-hot ranks vs ``argsort``).
+
+The top-k section is a *gate*, not just a figure: at n≥4096 with k≤n/16
+the bucket skip rule must beat the full sort on the same input or the
+bench raises — the committed ``BENCH_workloads.json`` baseline then holds
+the margin, and ``tools/perfguard.py`` re-judges both sides every run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, measure_interleaved
+
+
+def _topk_section(paper: bool) -> None:
+    from repro.core import SortEngine
+    from repro.data.distributions import make_array
+
+    eng = SortEngine()
+    sizes = (4096,) if common.SMOKE else (4096, 65536)
+    for n in sizes:
+        k = n // 16
+        x = make_array("random", n, seed=n)
+        # interleaved so host drift hits both sides of the ratio equally —
+        # the ratio is the gate, per the measure contract
+        ms = measure_interleaved({
+            "topk": lambda: eng.top_k(x, k),
+            "fullsort": lambda: eng.sort(x),
+        })
+        t_k, t_s = ms["topk"].median_s, ms["fullsort"].median_s
+        eng.top_k(x, k)
+        rep = eng.last_report or {}
+        speedup = t_s / max(t_k, 1e-12)
+        emit(
+            f"workloads/topk/random/n{n}/k{k}", t_k * 1e6,
+            f"fullsort_us={t_s * 1e6:.1f};speedup={speedup:.2f}x;"
+            f"skipped={rep.get('skipped_buckets')};kept={rep.get('kept_count')}",
+        )
+        if n >= 4096 and k <= n // 16 and t_k >= t_s:
+            raise RuntimeError(
+                f"top-k gate: eng.top_k(n={n}, k={k}) took {t_k * 1e6:.1f}us "
+                f">= full sort {t_s * 1e6:.1f}us — the bucket skip rule must "
+                "win at n>=4096, k<=n/16"
+            )
+
+
+def _merge_section(paper: bool) -> None:
+    from repro.core import SortEngine
+    from repro.data.distributions import make_array
+
+    eng = SortEngine()
+    n_buf = common.smoke_scaled(65536)
+    n_new = common.smoke_scaled(2048)
+    buf = np.sort(make_array("random", n_buf, seed=3))
+    new = make_array("random", n_new, seed=4)
+    whole = np.concatenate([buf, new])
+    ms = measure_interleaved({
+        "merge_tick": lambda: eng.merge_sorted(buf, new),
+        "resort": lambda: eng.sort(whole),
+    })
+    t_m, t_r = ms["merge_tick"].median_s, ms["resort"].median_s
+    emit(
+        f"workloads/merge_tick/buf{n_buf}/new{n_new}", t_m * 1e6,
+        f"resort_us={t_r * 1e6:.1f};speedup={t_r / max(t_m, 1e-12):.2f}x",
+    )
+
+
+def _pairs_section(paper: bool) -> None:
+    from repro.core import SortEngine
+    from repro.data.distributions import make_array
+
+    eng = SortEngine()
+    n = common.smoke_scaled(4096)
+    keys = make_array("random", n, seed=5)
+    flat = np.arange(n, dtype=np.int32)
+    tree = {
+        "idx": np.arange(n, dtype=np.int64),
+        "nested": (keys.astype(np.float64), (flat % 251).astype(np.int8)),
+    }
+    ms = measure_interleaved({
+        "flat": lambda: eng.sort_pairs(keys, flat),
+        "pytree3": lambda: eng.sort_pairs(keys, tree),
+    })
+    t_f, t_t = ms["flat"].median_s, ms["pytree3"].median_s
+    emit(
+        f"workloads/pairs_pytree/n{n}/leaves3", t_t * 1e6,
+        f"flat_us={t_f * 1e6:.1f};overhead={t_t / max(t_f, 1e-12):.2f}x",
+    )
+
+
+def _moe_section(paper: bool) -> None:
+    """The before/after for the argsort dispatch: same params, same input,
+    bit-identical outputs (tests/test_workloads.py) — only rank math
+    differs (one-hot cumsum vs one stable argsort)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe as MOE
+    from repro.models.common import NO_SHARD
+
+    grid = ((8, 2, 512),) if common.SMOKE else ((8, 2, 4096), (64, 6, 4096))
+    for E, k, T in grid:
+        cfg = ModelConfig(
+            family="moe", d_model=256, dtype=jnp.bfloat16,
+            moe=MoEConfig(
+                num_experts=E, num_experts_per_tok=k, expert_d_ff=512,
+                dispatch="sorted", capacity_factor=1.25,
+            ),
+        )
+        p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, T, 256), jnp.bfloat16)
+        cfg_a = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="argsort"))
+        f_sorted = jax.jit(lambda x: MOE.apply_moe(p, x, cfg, NO_SHARD)[0])
+        f_args = jax.jit(lambda x: MOE.apply_moe(p, x, cfg_a, NO_SHARD)[0])
+        ms = measure_interleaved({
+            "sorted": lambda: f_sorted(x),
+            "argsort": lambda: f_args(x),
+        })
+        t_s, t_a = ms["sorted"].median_s, ms["argsort"].median_s
+        emit(
+            f"workloads/moe_dispatch/sorted/E{E}k{k}T{T}", t_s * 1e6,
+            f"argsort_us={t_a * 1e6:.1f}",
+        )
+        emit(
+            f"workloads/moe_dispatch/argsort/E{E}k{k}T{T}", t_a * 1e6,
+            f"sorted_us={t_s * 1e6:.1f};speedup={t_s / max(t_a, 1e-12):.2f}x",
+        )
+
+
+def run(paper: bool = False) -> None:
+    _topk_section(paper)
+    _merge_section(paper)
+    _pairs_section(paper)
+    _moe_section(paper)
+
+
+if __name__ == "__main__":
+    run()

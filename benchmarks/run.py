@@ -36,6 +36,7 @@ from benchmarks import (
     bench_sortd,
     bench_speedup,
     bench_verify,
+    bench_workloads,
 )
 from benchmarks import common
 from benchmarks.common import DEFAULT_DTYPE, DTYPES
@@ -73,6 +74,7 @@ SUITES = {
         report=a.fleet_report,
     ),
     "faults": lambda a: bench_faults.run(a.paper),  # degraded serving (§11)
+    "workloads": lambda a: bench_workloads.run(a.paper),  # op layer (§12)
 }
 
 

@@ -22,7 +22,9 @@ class MoEConfig:
     expert_d_ff: int = 0  # per-expert hidden (deepseek ≠ dense d_ff)
     shared_d_ff: int = 0
     router_aux_loss: float = 0.01
-    dispatch: str = "sorted"  # 'sorted' (paper technique) | 'dense'
+    # 'sorted' (paper technique) | 'argsort' (same ranks via one stable
+    # argsort — bit-identical, DESIGN.md §12) | 'dense'
+    dispatch: str = "sorted"
     capacity_factor: float = 1.25
     expert_parallel: bool = False  # experts divide the TP axis (deepseek 64e)
     # §Perf lever: shard the (E, C, d) dispatch buffer's token dim over the

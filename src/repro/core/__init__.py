@@ -4,7 +4,9 @@ Modules: topology (OHHC graph), schedule (3-phase accumulation + Theorem-3
 accounting), partition (Array Division Procedure + balanced splitters),
 ohhc_sort (paper-faithful sort + counters + cost model), sample_sort
 (beyond-paper models), dist_sort (shard_map mesh implementation), engine
-(the unified autotuned dispatch layer over all three paths, DESIGN.md §4).
+(the unified autotuned dispatch layer over all three paths, DESIGN.md §4),
+workloads (host arithmetic behind the engine's top-k / pytree pairs /
+streaming-merge operations, DESIGN.md §12).
 """
 
 from repro.core.topology import OHHCTopology, table_1_1, HHC_SIZE
@@ -31,6 +33,14 @@ from repro.core.ohhc_sort import (
     model_comm_time_s,
 )
 from repro.core.dist_sort import dist_sort, host_check_globally_sorted
+from repro.core.workloads import (
+    WORKLOAD_OPS,
+    TopKTooLarge,
+    host_bucket_ids,
+    host_top_k,
+    merge_sorted_arrays,
+    topk_cut,
+)
 from repro.core.engine import (
     BITONIC_METHODS,
     ROW_BACKENDS,
@@ -85,4 +95,10 @@ __all__ = [
     "model_comm_time_s",
     "dist_sort",
     "host_check_globally_sorted",
+    "WORKLOAD_OPS",
+    "TopKTooLarge",
+    "host_bucket_ids",
+    "host_top_k",
+    "merge_sorted_arrays",
+    "topk_cut",
 ]

@@ -57,9 +57,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import partition
+from repro.core import partition, workloads
 from repro.core.ohhc_sort import ohhc_sort_host
 from repro.core.topology import OHHCTopology
+from repro.core.workloads import TopKTooLarge
 from repro.kernels import batched as batched_kernels
 from repro.kernels import ops
 
@@ -577,6 +578,78 @@ _sim_fill = partition.max_sentinel
 _sim_low = partition.min_sentinel
 
 
+def _paper_ids(x_pad: jax.Array, valid: jax.Array, *, P: int) -> jax.Array:
+    """Exact equal-width §3.1 bucket ids of the valid prefix (traced).
+
+    Integer dtypes: float32 maths collapses keys above 2^24 onto shared
+    bucket edges (the int64/uint32 adversarial case), skewing counts away
+    from the measured capacity model.  Unsigned subtraction is exact for
+    any signed span via two's-complement wraparound; width = span//P + 1
+    keeps every id strictly below P.  The numpy twin is
+    ``workloads.host_bucket_ids`` — the two must agree bit-for-bit, the
+    contract the top-k planner's host histogram relies on.
+    """
+    dtype = x_pad.dtype
+    fill = _sim_fill(dtype)
+    lo = jnp.min(jnp.where(valid, x_pad, fill))
+    hi = jnp.max(jnp.where(valid, x_pad, _sim_low(dtype)))
+    if jnp.issubdtype(dtype, jnp.integer):
+        u = jnp.uint64 if jnp.dtype(dtype).itemsize == 8 else jnp.uint32
+        lo_u = lo.astype(u)
+        width = (hi.astype(u) - lo_u) // P + 1
+        ids = ((x_pad.astype(u) - lo_u) // width).astype(jnp.int32)
+        return jnp.clip(ids, 0, P - 1)  # pad tail may wrap below lo
+    ftype = jnp.float64 if dtype == jnp.float64 else jnp.float32
+    lo_f = lo.astype(ftype)
+    width = (hi.astype(ftype) - lo_f) / P
+    width = jnp.where(width > 0, width, 1.0)
+    return jnp.clip(
+        jnp.floor((x_pad.astype(ftype) - lo_f) / width), 0, P - 1
+    ).astype(jnp.int32)
+
+
+def _sim_topk_padded(
+    x_pad: jax.Array,
+    n_valid: jax.Array,
+    *,
+    P: int,
+    keep: int,
+    capacity: int,
+    local_sort: Callable[[jax.Array], jax.Array],
+):
+    """Partial range-partition sort: the top-k skip rule on the sim path.
+
+    Every element is bucketed by the paper's equal-width rule, but only
+    the first ``keep`` bucket rows are scattered and sorted — the
+    equal-width rule orders buckets by value range, so every element of a
+    bucket past the cut is ≥ every kept element and the global head of
+    length ``sum(counts[:keep])`` is exact (DESIGN.md §12).  Buckets past
+    the cut route to the drop row alongside the pad tail.
+
+    Returns ``(head, counts, kept_total)``: ``kept_total`` is the
+    *unclipped* kept-element count, so ``sum(counts) < kept_total`` means
+    a kept bucket overflowed ``capacity`` (escalate) while
+    ``kept_total < k`` (host-side check) means the cut was too early
+    (widen ``keep``).
+    """
+    n_pad = x_pad.shape[0]
+    dtype = x_pad.dtype
+    fill = _sim_fill(dtype)
+    pos = jnp.arange(n_pad)
+    valid = pos < n_valid
+    ids = _paper_ids(x_pad, valid, P=P)
+    kept = valid & (ids < keep)
+    kept_total = jnp.sum(kept.astype(jnp.int32))
+    ids = jnp.where(kept, ids, keep)  # past-the-cut + pad tail → drop row
+    buckets, counts = partition.scatter_to_buckets(
+        jnp.where(kept, x_pad, fill), ids, keep + 1, capacity, fill_value=fill
+    )
+    buckets, counts = buckets[:keep], counts[:keep]
+    buckets = jax.vmap(local_sort)(buckets)
+    head = partition.unscatter(buckets, counts, min(n_pad, keep * capacity))
+    return head, counts, kept_total
+
+
 def _sim_sort_padded(
     x_pad: jax.Array,
     n_valid: jax.Array,
@@ -601,28 +674,7 @@ def _sim_sort_padded(
     pos = jnp.arange(n_pad)
     valid = pos < n_valid
     if method == "paper":
-        lo = jnp.min(jnp.where(valid, x_pad, fill))
-        hi = jnp.max(jnp.where(valid, x_pad, _sim_low(dtype)))
-        if jnp.issubdtype(dtype, jnp.integer):
-            # Exact integer bucket ids.  float32 maths collapses keys above
-            # 2^24 onto shared bucket edges (the int64/uint32 adversarial
-            # case), skewing counts away from the measured capacity model.
-            # Unsigned subtraction is exact for any signed span via
-            # two's-complement wraparound; width = span//P + 1 keeps every
-            # id strictly below P.
-            u = jnp.uint64 if jnp.dtype(dtype).itemsize == 8 else jnp.uint32
-            lo_u = lo.astype(u)
-            width = (hi.astype(u) - lo_u) // P + 1
-            ids = ((x_pad.astype(u) - lo_u) // width).astype(jnp.int32)
-            ids = jnp.clip(ids, 0, P - 1)  # pad tail may wrap below lo
-        else:
-            ftype = jnp.float64 if dtype == jnp.float64 else jnp.float32
-            lo_f = lo.astype(ftype)
-            width = (hi.astype(ftype) - lo_f) / P
-            width = jnp.where(width > 0, width, 1.0)
-            ids = jnp.clip(
-                jnp.floor((x_pad.astype(ftype) - lo_f) / width), 0, P - 1
-            ).astype(jnp.int32)
+        ids = _paper_ids(x_pad, valid, P=P)
     elif method == "sampled":
         s = int(min(n_pad, sample_size))
         # Strided gather over the *valid* region only (dynamic indices are
@@ -1196,12 +1248,34 @@ class SortEngine:
         return self.sort_segments(flat, lens)
 
     def sort_pairs(self, keys, vals):
-        """Key/payload sort with the bitonic pair kernel + warm shape cache.
+        """Key/payload sort — flat arrays on the pair kernel, pytrees via
+        a permutation gather (DESIGN.md §12).
 
-        The serving hot path (length-ordering a request batch) calls this
-        with a different batch size every tick; pow2 bucketing makes all of
+        A single flat 1-D payload array takes the legacy tagged bitonic
+        pair kernel directly (warm shape cache, returns jax arrays) — the
+        serving hot path (length-ordering a request batch) calls this with
+        a different batch size every tick, and pow2 bucketing makes all of
         them share a handful of executables instead of one per size.
+
+        Any other payload pytree (nested dicts/tuples, mixed dtypes,
+        multi-dim leaves) rides :meth:`argsort_keys`: the same tagged pair
+        kernel sorts ``(key, index)`` once, then every flattened leaf is
+        gathered by the permutation on the host — byte-exact for every
+        leaf dtype (64-bit leaves survive without jax x64).  Returns
+        ``(sorted_keys, same-structure payload)`` as numpy.
         """
+        leaves, treedef = jax.tree_util.tree_flatten(vals)
+        if (
+            len(leaves) == 1
+            and treedef == jax.tree_util.tree_structure(0)
+            and np.ndim(leaves[0]) == 1
+        ):
+            return self._sort_pairs_flat(keys, leaves[0])
+        return self._sort_pairs_tree(keys, leaves, treedef)
+
+    def _sort_pairs_flat(self, keys, vals):
+        """The legacy flat path: one payload array through the tagged
+        bitonic pair kernel (sentinel-tie safe, n_valid traced)."""
         keys = jnp.asarray(keys).ravel()
         vals = jnp.asarray(vals).ravel()
         n = keys.shape[0]
@@ -1226,6 +1300,289 @@ class SortEngine:
         vp = jnp.concatenate([vals, jnp.zeros((n_pad - n,), vals.dtype)])
         ks, vs = fn(kp, vp, n)
         return ks[:n], vs[:n]
+
+    def argsort_keys(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """``(sorted_keys, permutation)`` with ``sorted_keys == keys[perm]``.
+
+        The permutation comes from the tagged pair kernel sorting
+        ``(key, arange)`` — the sentinel-tie-safe path, so keys equal to
+        the dtype max keep their payload.  64-bit keys without jax x64 and
+        arrays past the kernel's ``MAX_TILE`` take the host stable argsort
+        (the same exactness rule as ``choose_plan``'s host fallback).
+        """
+        keys_np = np.asarray(keys).ravel()
+        n = keys_np.size
+        if n <= 1:
+            return keys_np.copy(), np.arange(n, dtype=np.int64)
+        if (keys_np.dtype.itemsize == 8 and not x64_enabled()) or (
+            ops.bucketed_length(n) > ops.MAX_TILE
+        ):
+            perm = np.argsort(keys_np, kind="stable")
+            self.last_report = {
+                "plan": SortPlan(
+                    "host", "pairs", None, None,
+                    f"argsort: {keys_np.dtype} n={n} host stable argsort "
+                    "(x64/tile exactness rule)",
+                ),
+                "n": n, "overflow_retries": 0, "counts_sum": n,
+            }
+            return keys_np[perm], perm
+        ks, perm = self._sort_pairs_flat(keys_np, np.arange(n, dtype=np.int32))
+        self.last_report = {
+            "plan": SortPlan(
+                "sim", "pairs", None, ops.bucketed_length(n),
+                f"argsort: tagged pair kernel over (key, arange), n={n}",
+            ),
+            "n": n, "overflow_retries": 0, "counts_sum": n,
+        }
+        return np.asarray(ks), np.asarray(perm).astype(np.int64)
+
+    def _sort_pairs_tree(self, keys, leaves, treedef):
+        """Pytree payload path: one key argsort, then a host gather of
+        every flattened leaf along its leading axis (byte-exact)."""
+        keys_np = np.asarray(keys).ravel()
+        n = keys_np.size
+        np_leaves = [np.asarray(leaf) for leaf in leaves]
+        for i, leaf in enumerate(np_leaves):
+            if leaf.ndim < 1 or leaf.shape[0] != n:
+                raise ValueError(
+                    f"sort_pairs: payload leaf {i} has shape {leaf.shape}; "
+                    f"leading dim must equal n={n}"
+                )
+        if n <= 1:
+            out_leaves = [leaf.copy() for leaf in np_leaves]
+            return keys_np.copy(), jax.tree_util.tree_unflatten(
+                treedef, out_leaves
+            )
+        ks, perm = self.argsort_keys(keys_np)
+        out_leaves = [leaf[perm] for leaf in np_leaves]
+        return ks, jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    # ----------------------------------------------------------------- top-k
+    def _check_top_k(self, n: int, k) -> int:
+        if isinstance(k, bool) or not isinstance(k, (int, np.integer)):
+            raise TypeError(f"top_k: k must be an int, got {type(k).__name__}")
+        k = int(k)
+        if k < 0:
+            raise ValueError(f"top_k: k must be >= 0, got {k}")
+        if k > n:
+            raise TopKTooLarge(f"top_k: k={k} exceeds n={n}")
+        return k
+
+    def _plan_top_k_info(self, x_np: np.ndarray, k: int):
+        """Plan + exact skip/capacity accounting for one top-k request.
+
+        One O(n) host histogram under the *exact* kernel bucket rule
+        (``workloads.host_bucket_ids``) yields the cut bucket, the
+        skipped-bucket count, and — the satellite fix — a capacity sized
+        to the KEPT buckets only: a full sort's ``autotune_capacity`` is
+        worst-bucket-sized over the whole array, and a top-k plan must not
+        inherit a capacity paid for buckets it skips.
+        """
+        n = x_np.size
+        P = self.topo.total_procs
+        ids = workloads.host_bucket_ids(x_np, P)
+        counts = np.bincount(ids, minlength=P)
+        keep, skipped = workloads.topk_cut(counts, k)
+        kept_count = int(counts[:keep].sum())
+        # Static-shape quantization for the jit cache: the executed kept
+        # prefix is the pow2 ceiling of the exact cut (capped at P), so
+        # nearby cuts share one executable.
+        keep_exec = min(P, 1 << int(keep - 1).bit_length())
+        padded_n = ops.bucketed_length(n)
+        if (
+            (x_np.dtype.itemsize == 8 and not x64_enabled())
+            or n >= self.host_threshold
+            or kept_count <= n // 4
+        ):
+            # Small heads (or no exact jit path): the host executor sorts
+            # only the kept prefix — numpy on n/4 elements beats a padded
+            # device round-trip of the whole array.
+            plan = SortPlan(
+                "host", "topk", None, None,
+                f"top_k k={k}: skipped={skipped}/{P} buckets past the cut, "
+                f"kept {kept_count}/{n} keys; exact host head",
+            )
+        else:
+            cap = max(int(counts[:keep_exec].max()), 8)
+            cap += (-cap) % 8
+            cap = min(cap, padded_n + (-padded_n) % 8)
+            plan = SortPlan(
+                "sim", "topk", cap, padded_n,
+                f"top_k k={k}: skipped={P - keep_exec}/{P} buckets past the "
+                f"cut (exact cut {keep}, pow2 exec {keep_exec}), kept-bucket "
+                f"capacity={cap}",
+            )
+        plan = self._apply_fault(plan, n=n, itemsize=x_np.dtype.itemsize)
+        info = {
+            "keep": keep,
+            "keep_exec": keep_exec,
+            "skipped": skipped,
+            "kept_count": kept_count,
+            "counts": counts,
+        }
+        return plan, info
+
+    def plan_top_k(self, x, k) -> SortPlan:
+        """The top-k dispatch decision without executing it — the
+        introspection twin of :meth:`plan` for the head workload."""
+        x_np = np.asarray(x).ravel()
+        k = self._check_top_k(x_np.size, k)
+        if k == 0 or x_np.size <= 1:
+            return SortPlan(
+                "host", "topk", None, None, f"top_k k={k}: trivial head"
+            )
+        return self._plan_top_k_info(x_np, k)[0]
+
+    def top_k(self, x, k, *, plan: SortPlan | None = None) -> np.ndarray:
+        """The sorted head ``np.sort(x)[:k]`` without sorting past rank k.
+
+        Reuses the partition kernel's bucket machinery: the equal-width
+        rule orders buckets by value range, so once the cumulative bucket
+        histogram covers ``k`` every later bucket is wholly past the head
+        and is skipped (``SortPlan.reason`` reports the skipped-bucket
+        count).  Always exact, ties at rank k included — the head is a
+        prefix of the true sorted order.  ``k > n`` raises
+        :class:`~repro.core.workloads.TopKTooLarge`.
+        """
+        x_np = np.asarray(x).ravel()
+        n = x_np.size
+        k = self._check_top_k(n, k)
+        P = self.topo.total_procs
+        if k == 0 or n == 0:
+            self.last_report = {
+                "plan": None, "n": n, "k": k, "overflow_retries": 0,
+                "skipped_buckets": P, "kept_count": 0,
+            }
+            return x_np[:0].copy()
+        if n <= 1:
+            self.last_report = {
+                "plan": None, "n": n, "k": k, "overflow_retries": 0,
+                "skipped_buckets": 0, "kept_count": n,
+            }
+            return x_np.copy()
+        auto_plan, info = self._plan_top_k_info(x_np, k)
+        if plan is None:
+            plan = auto_plan
+        else:
+            plan = self._apply_fault(plan, n=n, itemsize=x_np.dtype.itemsize)
+        if plan.path != "sim":
+            head, hinfo = workloads.host_top_k(x_np, k, P)
+            self.last_report = {
+                "plan": plan, "n": n, "k": k, "overflow_retries": 0,
+                "skipped_buckets": hinfo["skipped_buckets"],
+                "kept_count": hinfo["kept_count"],
+                "counts_sum": hinfo["kept_count"],
+            }
+            return head
+        padded_n = plan.padded_n or ops.bucketed_length(n)
+        capacity = plan.capacity or partition.default_capacity(padded_n, P)
+        keep = info["keep_exec"]
+        x_pad = np.zeros(padded_n, x_np.dtype)
+        x_pad[:n] = x_np
+        xj = jnp.asarray(x_pad)
+        retries = 0
+        while True:
+            fn = self._get_topk_fn(padded_n, capacity, keep, x_np.dtype)
+            head_pad, counts, kept_total = fn(xj, n)
+            kept_total = int(kept_total)
+            got = int(jnp.sum(counts))
+            if got < kept_total:
+                # A kept bucket overflowed its (kept-only) capacity:
+                # escalate ×2 exactly like sort's retry loop.
+                if capacity >= padded_n:
+                    raise AssertionError("overflow with capacity == padded_n")
+                capacity = min(padded_n, capacity * 2)
+                capacity += (-capacity) % 8
+                retries += 1
+                continue
+            if kept_total < k:
+                # A forced/stale plan cut too early: widen the kept prefix.
+                if keep >= P:
+                    raise AssertionError("top_k cut miss with keep == P")
+                keep = min(P, keep * 2)
+                retries += 1
+                continue
+            break
+        self.last_report = {
+            "plan": plan, "n": n, "k": k, "capacity_used": capacity,
+            "skipped_buckets": P - keep, "kept_count": kept_total,
+            "counts_sum": got, "overflow_retries": retries,
+            "counts": np.asarray(counts),
+        }
+        return np.asarray(head_pad)[:k]
+
+    def _get_topk_fn(self, padded_n: int, capacity: int, keep: int, dtype):
+        key = ("topk", padded_n, capacity, keep, str(dtype))
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            def traced(x_pad, n_valid):
+                self.trace_count += 1  # runs at trace time only
+                return _sim_topk_padded(
+                    x_pad, n_valid, P=self.topo.total_procs, keep=keep,
+                    capacity=capacity, local_sort=self.local_sort,
+                )
+
+            fn = jax.jit(traced)
+            self._fn_cache[key] = fn
+        return fn
+
+    # ----------------------------------------------------------------- merge
+    def merge_sorted(self, sorted_buf, new_keys) -> np.ndarray:
+        """Fold ``new_keys`` into an already-sorted buffer incrementally.
+
+        The streaming workload (DESIGN.md §12): a buffer that grows every
+        tick no longer pays O(n log n) per tick — the increment goes
+        through the full engine dispatch (``sort``) and the two ascending
+        runs fuse in O(n + m) with the ``searchsorted`` gather, the
+        paper's merge-free accumulation applied across time.  The buffer
+        must already be ascending (validated, O(n)); dtype mismatches are
+        a typed error, never a silent cast.
+        """
+        buf = np.asarray(sorted_buf).ravel()
+        new = np.asarray(new_keys).ravel()
+        if buf.dtype != new.dtype:
+            raise ValueError(
+                f"merge_sorted: dtype mismatch — buffer {buf.dtype} "
+                f"vs new keys {new.dtype}"
+            )
+        if not workloads.check_sorted(buf):
+            raise ValueError(
+                "merge_sorted: sorted_buf is not ascending — sort it first"
+            )
+        if new.size == 0:
+            self.last_report = {
+                "plan": SortPlan(
+                    "host", "merge", None, None,
+                    f"merge: empty increment onto |buf|={buf.size}",
+                ),
+                "n": buf.size, "overflow_retries": 0,
+                "counts_sum": buf.size, "merged_new": 0,
+            }
+            return buf.copy()
+        inner_plan = None
+        retries = 0
+        if new.size > 1:
+            new_sorted = self.sort(new)  # full dispatch for the increment
+            inner = self.last_report or {}
+            inner_plan = inner.get("plan")
+            retries = int(inner.get("overflow_retries", 0))
+        else:
+            new_sorted = new
+        out = workloads.merge_sorted_arrays(buf, new_sorted)
+        plan = SortPlan(
+            "host", "merge", None, None,
+            f"merge: |buf|={buf.size} reused sorted, |new|={new.size} "
+            f"engine-sorted ({getattr(inner_plan, 'path', 'trivial')}"
+            f"/{getattr(inner_plan, 'method', '-')}), "
+            "O(n+m) searchsorted gather",
+        )
+        self.last_report = {
+            "plan": plan, "n": out.size, "overflow_retries": retries,
+            "counts_sum": out.size, "merged_new": int(new.size),
+            "inner_plan": inner_plan,
+        }
+        return out
 
     # ------------------------------------------------------------------ dist
     def _sort_dist(self, x_np: np.ndarray, plan: SortPlan, stats) -> np.ndarray:

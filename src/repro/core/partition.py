@@ -123,7 +123,15 @@ def unpack_segments(padded, seg_lens) -> list[np.ndarray]:
 
 
 def paper_bucket_ids(x: jax.Array, num_buckets: int) -> jax.Array:
-    """§3.1: equal-width value-range bucket ids in ``[0, num_buckets)``."""
+    """§3.1: equal-width value-range bucket ids in ``[0, num_buckets)``.
+
+    Float-based and therefore NOT exact for integer keys above 2^24 — the
+    engine's sim path uses the exact unsigned-integer rule instead
+    (``engine._paper_ids``), whose bit-identical host twin is
+    ``repro.core.workloads.host_bucket_ids`` (re-exported below).  Use
+    that pair whenever a host-side histogram must predict the kernel's
+    scatter exactly (the top-k planner's contract, DESIGN.md §12).
+    """
     x = jnp.asarray(x)
     lo = jnp.min(x).astype(jnp.float64 if x.dtype == jnp.int64 else jnp.float32)
     hi = jnp.max(x).astype(lo.dtype)
@@ -232,3 +240,9 @@ def unscatter(
     out = jnp.zeros(total + 1, buckets.dtype)
     out = out.at[dest.ravel()].set(buckets.ravel())
     return out[:total]
+
+
+# Exact host-side twin of the engine's integer equal-width rule — lives in
+# ``repro.core.workloads`` (pure numpy, no jax) and is re-exported here so
+# bucket-rule callers find both variants in one module.
+from repro.core.workloads import host_bucket_ids  # noqa: E402,F401

@@ -11,8 +11,13 @@ partition, and the merge-free gather property becomes the contiguous
 ``dispatch='sorted'`` uses ``repro.core.partition`` bucket counts/ranks
 (the same math as the Pallas ``partition_kernel``) to compute, for every
 assignment, its slot in the (E, C, d) dispatch buffer — histogram + stable
-rank, no data-dependent control flow.  ``dispatch='dense'`` is the
-one-hot einsum baseline (tiny shapes / numerics oracle).
+rank, no data-dependent control flow.  ``dispatch='argsort'`` computes the
+same ranks from ONE stable argsort of the expert ids (position minus
+group start) — the ``SortEngine.sort_pairs`` permutation-gather
+formulation in-graph, O(A log A) instead of the one-hot O(A·E), with
+bit-identical outputs (DESIGN.md §12; the before/after lives in
+``benchmarks/bench_workloads.py``).  ``dispatch='dense'`` is the one-hot
+einsum baseline (tiny shapes / numerics oracle).
 
 Sharding: expert-parallel (experts → tensor axis) when ``E % tp == 0``,
 else tensor-parallel on d_ff.  On the multi-pod mesh the (E,C,d) buffer's
@@ -189,7 +194,7 @@ def apply_moe(p, x, cfg, rules: AxisRules):
             cfg2 = cfg.replace(moe=cfg.moe.__class__(
                 **{**cfg.moe.__dict__, "dispatch": "sorted"}))
             return apply_moe(p, x, cfg2, rules)  # incl. shared experts
-    elif m.dispatch == "sorted":
+    elif m.dispatch in ("sorted", "argsort"):
         T = B * S
         k = m.num_experts_per_tok
         A = T * k  # total assignments
@@ -198,9 +203,24 @@ def apply_moe(p, x, cfg, rules: AxisRules):
         flat_e = top_e.reshape(A)  # assignment → expert id ("value" to bucket)
         flat_w = top_p.reshape(A).astype(jnp.float32)
         tok_idx = jnp.repeat(jnp.arange(T), k)
-        # --- Array Division: histogram + stable rank per expert bucket ----
         counts = core_partition.bucket_counts(flat_e, m.num_experts)
-        ranks = core_partition.bucket_ranks(flat_e, m.num_experts)
+        if m.dispatch == "argsort":
+            # --- sort_pairs formulation: ONE stable argsort groups the
+            # assignments by expert, and each rank is its position minus
+            # its expert's group start — O(A log A) against 'sorted''s
+            # O(A·E) one-hot rank matrix, the in-graph twin of
+            # ``SortEngine.sort_pairs``' permutation gather (DESIGN.md
+            # §12).  jnp.argsort is stable, so ranks keep order-of-
+            # appearance and the outputs are bit-identical to 'sorted'.
+            order = jnp.argsort(flat_e)
+            starts = jnp.cumsum(counts) - counts
+            ranks_sorted = (
+                jnp.arange(A, dtype=jnp.int32) - starts[flat_e[order]]
+            )
+            ranks = jnp.zeros(A, jnp.int32).at[order].set(ranks_sorted)
+        else:
+            # --- Array Division: histogram + stable rank per bucket -----
+            ranks = core_partition.bucket_ranks(flat_e, m.num_experts)
         keep = ranks < cap
         slot = jnp.where(keep, flat_e * cap + ranks, m.num_experts * cap)
         # dispatch buffer (E*C, d): gather token vectors into bucket order

@@ -25,7 +25,10 @@ import numpy as np
 from repro.perf.normalize import Workload
 from repro.perf.schema import PerfCase
 
-SUITE_NAMES = ("engine", "sortd", "kernels", "netsim", "verify", "fleet", "faults")
+SUITE_NAMES = (
+    "engine", "sortd", "kernels", "netsim", "verify", "fleet", "faults",
+    "workloads",
+)
 
 
 def _sort_workload(n: int, itemsize: int) -> Workload:
@@ -387,6 +390,149 @@ def faults_cases(*, smoke: bool = True) -> "list[PerfCase]":
     return cases
 
 
+# --- workloads ------------------------------------------------------------
+
+
+def _topk_setup(n: int, k: int):
+    def setup():
+        from repro.core import SortEngine
+        from repro.data.distributions import make_array
+
+        eng = SortEngine()
+        x = make_array("random", n, seed=n)
+        eng.top_k(x, k)  # warm the per-(capacity, keep) executable
+        return lambda: eng.top_k(x, k)
+
+    return setup
+
+
+def _fullsort_setup(n: int):
+    """The full-sort half of the top-k pair — same seeded input, so the
+    committed raw_s ratio IS the skip-rule margin perfguard re-judges."""
+
+    def setup():
+        from repro.core import SortEngine
+        from repro.data.distributions import make_array
+
+        eng = SortEngine()
+        x = make_array("random", n, seed=n)
+        eng.sort(x)
+        return lambda: eng.sort(x)
+
+    return setup
+
+
+def _merge_tick_setup(n_buf: int, n_new: int):
+    def setup():
+        from repro.core import SortEngine
+        from repro.data.distributions import make_array
+
+        eng = SortEngine()
+        buf = np.sort(make_array("random", n_buf, seed=3))
+        new = make_array("random", n_new, seed=4)
+        eng.merge_sorted(buf, new)
+        return lambda: eng.merge_sorted(buf, new)
+
+    return setup
+
+
+def _pairs_pytree_setup(n: int):
+    def setup():
+        from repro.core import SortEngine
+        from repro.data.distributions import make_array
+
+        eng = SortEngine()
+        keys = make_array("random", n, seed=5)
+        idx = np.arange(n, dtype=np.int64)
+        vals = {"idx": idx, "nested": (keys.astype(np.float64),)}
+        eng.sort_pairs(keys, vals)
+        return lambda: eng.sort_pairs(keys, vals)
+
+    return setup
+
+
+def _moe_dispatch_setup(dispatch: str):
+    def setup():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs.base import MoEConfig, ModelConfig
+        from repro.models import moe as MOE
+        from repro.models.common import NO_SHARD
+
+        cfg = ModelConfig(
+            family="moe", d_model=256, dtype=jnp.bfloat16,
+            moe=MoEConfig(
+                num_experts=8, num_experts_per_tok=2, expert_d_ff=512,
+                dispatch=dispatch, capacity_factor=1.25,
+            ),
+        )
+        p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 256), jnp.bfloat16)
+        f = jax.jit(lambda x: MOE.apply_moe(p, x, cfg, NO_SHARD)[0])
+        f(x).block_until_ready()
+        return lambda: f(x).block_until_ready()
+
+    return setup
+
+
+def workloads_cases(*, smoke: bool = True) -> "list[PerfCase]":
+    """The §12 workload layer, gated as paired rows.
+
+    ``topk`` and ``fullsort`` share the same seeded input: the committed
+    ``raw_s`` ratio between them is the skip-rule speedup the issue gates
+    (top-k must beat a full sort at n≥4096, k≤n/16 — the hard fail lives
+    in ``benchmarks/bench_workloads.py``; here perfguard re-judges each
+    side against its own baseline every run).  Host-path ops (top-k's
+    numpy head, the merge gather) are microsecond-scale python+numpy —
+    raw-seconds with the wide band, no device work model.
+    """
+    band = {"lower": 0.70, "upper": 1.50}
+    n = 65536
+    cases = [
+        PerfCase(
+            suite="workloads",
+            key=f"topk/random/{n}/k{n // 16}",
+            setup=_topk_setup(n, n // 16),
+            workload=None,
+            **band,
+        ),
+        PerfCase(
+            suite="workloads",
+            key=f"fullsort/random/{n}",
+            setup=_fullsort_setup(n),
+            workload=_sort_workload(n, 4),
+        ),
+        PerfCase(
+            suite="workloads",
+            key="merge_tick/buf65536/new2048",
+            setup=_merge_tick_setup(65536, 2048),
+            workload=None,
+            **band,
+        ),
+        PerfCase(
+            suite="workloads",
+            key="pairs_pytree/random/4096",
+            setup=_pairs_pytree_setup(4096),
+            workload=_sort_workload(4096, 4),
+            **band,
+        ),
+    ]
+    if not smoke:
+        cases += [
+            PerfCase(
+                suite="workloads",
+                key=f"moe_dispatch/{dispatch}/E8k2T512",
+                setup=_moe_dispatch_setup(dispatch),
+                workload=None,
+                smoke=False,
+                **band,
+            )
+            for dispatch in ("sorted", "argsort")
+        ]
+    return cases
+
+
 # --- verify ---------------------------------------------------------------
 
 
@@ -441,6 +587,7 @@ SUITES = {
     "verify": verify_cases,
     "fleet": fleet_cases,
     "faults": faults_cases,
+    "workloads": workloads_cases,
 }
 
 

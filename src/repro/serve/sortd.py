@@ -79,6 +79,7 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.core import workloads
 from repro.core.engine import SortEngine
 from repro.kernels import ops
 
@@ -144,6 +145,12 @@ class _Pending:
     keys: np.ndarray
     t_enqueue: float
     future: Future
+    # Workload tag (DESIGN.md §12): "sort" coalesces as before; "merge"
+    # carries the caller's already-sorted buffer and bins under its own
+    # op-prefixed key, so merge and sort traffic on the same
+    # (dtype, bucket) never share a batch.
+    op: str = "sort"
+    buf: "np.ndarray | None" = None
 
 
 class _Stop:
@@ -334,7 +341,36 @@ class Sortd:
         after ``close()``.
         """
         arr = np.asarray(keys).ravel()
-        item = _Pending(arr, time.monotonic(), Future())
+        return self._enqueue(_Pending(arr, time.monotonic(), Future()))
+
+    def submit_merge(self, sorted_buf, new_keys) -> Future:
+        """Enqueue an incremental merge; resolves to the merged array.
+
+        The streaming workload (DESIGN.md §12): ``new_keys`` coalesces
+        with other merge increments of the same (dtype, shape bucket) —
+        one fused ``sort_segments`` call sorts every batch's increments —
+        and each result then folds into its caller's ``sorted_buf`` with
+        the O(n+m) gather.  Merge bins carry their own op-prefixed
+        coalescing key, so they never share a batch with plain sort
+        requests on the same (dtype, bucket).  The buffer is validated
+        ascending at serve time; a bad buffer fails only its own future.
+        """
+        buf = np.asarray(sorted_buf).ravel()
+        new = np.asarray(new_keys).ravel()
+        if buf.dtype != new.dtype:
+            raise ValueError(
+                f"merge: dtype mismatch — buffer {buf.dtype} "
+                f"vs new keys {new.dtype}"
+            )
+        return self._enqueue(
+            _Pending(new, time.monotonic(), Future(), op="merge", buf=buf)
+        )
+
+    def merge(self, sorted_buf, new_keys, timeout: float | None = 60.0) -> np.ndarray:
+        """Synchronous wrapper: ``submit_merge(...).result()``."""
+        return self.submit_merge(sorted_buf, new_keys).result(timeout=timeout)
+
+    def _enqueue(self, item: _Pending) -> Future:
         with self._close_lock:
             if self._closed:
                 raise RuntimeError("sortd is closed")
@@ -394,8 +430,10 @@ class Sortd:
             }
 
     # ------------------------------------------------------------- worker
-    def _bin_key(self, arr: np.ndarray) -> tuple[str, int]:
-        return affinity_key(arr)
+    def _bin_key(self, item: _Pending) -> tuple[str, str, int]:
+        # op-prefixed: "merge" increments never coalesce with "sort"
+        # requests of the same (dtype, bucket) — batches stay homogeneous
+        return (item.op,) + affinity_key(item.keys)
 
     def _beat(self) -> None:
         for fn in self._tick_hooks:
@@ -499,7 +537,7 @@ class Sortd:
         if item.keys.size > self.config.max_bucket:
             self._serve_direct(item)
             return
-        key = self._bin_key(item.keys)
+        key = self._bin_key(item)
         self._bins.setdefault(key, []).append(item)
         self._binned += 1
         if len(self._bins[key]) >= self.config.max_batch:
@@ -521,11 +559,11 @@ class Sortd:
         for key in list(self._bins):
             self._flush(key, reason)
 
-    def _flush(self, key: tuple[str, int], reason: str) -> None:
+    def _flush(self, key: tuple[str, str, int], reason: str) -> None:
         batch = self._bins.pop(key)
         self._binned -= len(batch)
         t_busy0 = time.monotonic()
-        dtype_str, bucket = key
+        op, dtype_str, bucket = key
         lens = [p.keys.size for p in batch]
         try:
             flat = (
@@ -544,18 +582,43 @@ class Sortd:
             for p in batch:
                 p.future.set_exception(e)
             return
+        errs: "list[Exception | None]" = [None] * len(batch)
+        if op == "merge":
+            # Merge batch (DESIGN.md §12): the fused call above sorted
+            # every increment; fold each into its caller's buffer with the
+            # O(n+m) gather.  check=True validates the buffer ascending —
+            # a bad buffer fails only ITS future, never its batch-mates'.
+            merged: list = []
+            for i, (p, out) in enumerate(zip(batch, outs)):
+                try:
+                    merged.append(
+                        workloads.merge_sorted_arrays(
+                            p.buf, np.asarray(out), check=True
+                        )
+                    )
+                except Exception as e:
+                    merged.append(None)
+                    errs[i] = e
+            outs = merged
         done = time.monotonic()
         self._busy_s += done - t_busy0
         lats = [done - p.t_enqueue for p in batch]
+        n_err = sum(1 for e in errs if e is not None)
         # Account BEFORE resolving: a caller that wakes on the last future
         # and immediately reads metrics() must see these requests counted.
         with self._lock:
             self._flushes[reason] += 1
             if fault is not None:
                 self._degraded_flushes += 1
-            self._completed += len(batch)
+            self._completed += len(batch) - n_err
+            self._failed += n_err
             self._all_lat_s.extend(lats)
-            b = self._bucket_stats(f"{dtype_str}/{bucket}")
+            label = (
+                f"{dtype_str}/{bucket}"
+                if op == "sort"
+                else f"{op}/{dtype_str}/{bucket}"
+            )
+            b = self._bucket_stats(label)
             b.requests += len(batch)
             b.batches += 1
             b.rows += len(batch)
@@ -563,14 +626,20 @@ class Sortd:
             b.pad_cells += len(batch) * bucket - int(sum(lens))
             b.lat_s.extend(lats)
             b.methods[method] = b.methods.get(method, 0) + 1
-        for p, out in zip(batch, outs):
-            p.future.set_result(out)
+        for p, out, err in zip(batch, outs, errs):
+            if err is not None:
+                p.future.set_exception(err)
+            else:
+                p.future.set_result(out)
         self._beat()  # heartbeat between flushes of a long backlog
 
     def _serve_direct(self, item: _Pending) -> None:
         t_busy0 = time.monotonic()
         try:
-            out = self.engine.sort(item.keys)
+            if item.op == "merge":
+                out = self.engine.merge_sorted(item.buf, item.keys)
+            else:
+                out = self.engine.sort(item.keys)
         except Exception as e:
             self._busy_s += time.monotonic() - t_busy0
             with self._lock:
@@ -580,11 +649,16 @@ class Sortd:
         done = time.monotonic()
         self._busy_s += done - t_busy0
         lat = done - item.t_enqueue
+        label = (
+            f"{item.keys.dtype}/direct"
+            if item.op == "sort"
+            else f"{item.op}/{item.keys.dtype}/direct"
+        )
         with self._lock:  # account before resolving (see _flush)
             self._oversize_direct += 1
             self._completed += 1
             self._all_lat_s.append(lat)
-            b = self._bucket_stats(f"{item.keys.dtype}/direct")
+            b = self._bucket_stats(label)
             b.requests += 1
             b.batches += 1
             b.rows += 1

@@ -20,10 +20,15 @@ from repro.verify.grid import (
     DIMS,
     DTYPES,
     SIZE_BUCKETS,
+    WORKLOAD_OPS,
     FaultCell,
+    OpScenario,
     Scenario,
     fault_grid,
     full_grid,
+    op_prune_reason,
+    op_smoke_grid,
+    op_tier1_grid,
     prune_reason,
     smoke_grid,
     tier1_grid,
@@ -34,6 +39,8 @@ from repro.verify.differential import (
     run_fault_grid,
     run_fault_scenario,
     run_grid,
+    run_op_grid,
+    run_op_scenario,
     run_scenario,
 )
 from repro.verify.properties import (
@@ -53,10 +60,15 @@ __all__ = [
     "DIMS",
     "DTYPES",
     "SIZE_BUCKETS",
+    "WORKLOAD_OPS",
     "FaultCell",
+    "OpScenario",
     "Scenario",
     "fault_grid",
     "full_grid",
+    "op_prune_reason",
+    "op_smoke_grid",
+    "op_tier1_grid",
     "prune_reason",
     "smoke_grid",
     "tier1_grid",
@@ -65,6 +77,8 @@ __all__ = [
     "run_fault_grid",
     "run_fault_scenario",
     "run_grid",
+    "run_op_grid",
+    "run_op_scenario",
     "run_scenario",
     "fault_replay",
     "metamorphic_checks",

@@ -28,7 +28,13 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import OHHCTopology, SortEngine, SortPlan, autotune_capacity
-from repro.verify.grid import FAULT_IMPOSSIBLE, FaultCell, Scenario, SegmentScenario
+from repro.verify.grid import (
+    FAULT_IMPOSSIBLE,
+    FaultCell,
+    OpScenario,
+    Scenario,
+    SegmentScenario,
+)
 
 
 @dataclasses.dataclass
@@ -361,6 +367,143 @@ def run_grid(
     results = []
     for sc in scenarios:
         r = run_scenario(sc, engines, keep_output=keep_outputs)
+        results.append(r)
+        if progress is not None:
+            progress(r)
+    return results
+
+
+def _op_pytree_payload(x: np.ndarray) -> dict:
+    """The conformance payload for ``pairs_pytree`` cells: a nested
+    dict/tuple with mixed dtypes (64-bit, float, sub-byte-range int) so the
+    leaf gather is exercised on every byte width at once."""
+    idx = np.arange(x.size, dtype=np.int64)
+    return {
+        "idx": idx,
+        "nested": (x.astype(np.float64), (idx % 251).astype(np.int8)),
+    }
+
+
+def run_op_scenario(
+    sc: OpScenario, engines: EngineCache, *, keep_output: bool = True
+) -> ScenarioResult:
+    """Execute one workload-op cell (DESIGN.md §12) against its oracle.
+
+    Per-op oracle:
+
+    * ``sort``         — ``np.sort(x)`` (the baseline the others share);
+    * ``top_k``        — ``np.sort(x)[:k]``, and the plan's ``reason`` must
+      carry the ``skipped=`` bucket accounting the issue pins;
+    * ``pairs_pytree`` — keys equal ``np.sort(x)``; the ``idx`` leaf is a
+      valid permutation and every other leaf is byte-identical to
+      ``leaf[perm]`` (the gather contract);
+    * ``merge``        — host-sorted prefix + chunked ``merge_sorted``
+      folds of the remainder equals ``np.sort(x)``.
+
+    The stored ``output`` is always the fully-sorted key view the op
+    implies (the head for top-k), so cells sharing a ``group_id`` —
+    ``sort``/``pairs_pytree``/``merge`` on the same input — byte-compare
+    against each other in :func:`cross_check`.
+    """
+    x = sc.make_input()
+    oracle = np.sort(x)
+    eng = engines.segment_engine()
+    t0 = time.perf_counter()
+    try:
+        if sc.op == "sort":
+            out = np.asarray(eng.sort(x))
+            want = oracle
+        elif sc.op == "top_k":
+            out = np.asarray(eng.top_k(x, sc.k))
+            want = oracle[: sc.k]
+        elif sc.op == "pairs_pytree":
+            keys_s, vals_s = eng.sort_pairs(x, _op_pytree_payload(x))
+            out = np.asarray(keys_s)
+            want = oracle
+        elif sc.op == "merge":
+            split = 2 * x.size // 3
+            buf = np.sort(x[:split])
+            rest = x[split:]
+            for chunk in np.array_split(rest, 3):
+                buf = eng.merge_sorted(buf, chunk)
+            out = np.asarray(buf)
+            want = oracle
+        else:  # pragma: no cover - pruned upstream
+            raise ValueError(f"unknown op {sc.op!r}")
+    except Exception as e:  # an executor crash is a finding, not an abort
+        return ScenarioResult(
+            sc, "fail", f"error: {type(e).__name__}: {e}", sc.path, sc.method,
+            None, 0, None, time.perf_counter() - t0,
+        )
+    elapsed = time.perf_counter() - t0
+    report = eng.last_report or {}
+    plan = report.get("plan")
+    path = plan.path if plan is not None else "host"
+    method = plan.method if plan is not None else sc.op
+    capacity = report.get("capacity_used")
+    capacity = int(capacity) if capacity is not None else None
+    retries = int(report.get("overflow_retries", 0))
+    counts_sum = report.get("counts_sum")
+    counts_sum = int(counts_sum) if counts_sum is not None else None
+
+    status, detail = "pass", ""
+    if out.dtype != x.dtype:
+        status, detail = "fail", f"dtype changed: {x.dtype} -> {out.dtype}"
+    elif out.shape != want.shape:
+        status, detail = "fail", f"shape changed: {want.shape} -> {out.shape}"
+    elif not np.array_equal(out, want):
+        bad = int(np.flatnonzero(out != want)[0])
+        status = "fail"
+        detail = (
+            f"oracle mismatch at index {bad}: got {out[bad]!r}, "
+            f"want {want[bad]!r}"
+        )
+    elif sc.op == "top_k":
+        if plan is None or "skipped=" not in (plan.reason or ""):
+            status = "fail"
+            detail = (
+                "top_k plan reason lacks skipped-bucket accounting: "
+                f"{plan.reason if plan is not None else None!r}"
+            )
+        elif int(report.get("kept_count", 0)) < sc.k:
+            status = "fail"
+            detail = (
+                f"kept_count={report.get('kept_count')} < k={sc.k} "
+                "after retries — cut under-covers the head"
+            )
+    elif sc.op == "pairs_pytree":
+        perm = np.asarray(vals_s["idx"])
+        f64, i8 = vals_s["nested"]
+        if not np.array_equal(np.sort(perm), np.arange(x.size)):
+            status, detail = "fail", "payload idx leaf is not a permutation"
+        elif np.asarray(f64).tobytes() != x.astype(np.float64)[perm].tobytes():
+            status, detail = "fail", "float64 leaf not gathered by idx perm"
+        elif np.asarray(i8).tobytes() != (
+            (np.arange(x.size, dtype=np.int64) % 251).astype(np.int8)[perm]
+        ).tobytes():
+            status, detail = "fail", "int8 leaf not gathered by idx perm"
+    elif sc.op == "sort" and counts_sum is not None and counts_sum != x.size:
+        status = "fail"
+        detail = f"element accounting: counts_sum={counts_sum} != n={x.size}"
+    return ScenarioResult(
+        sc, status, detail, path, method, capacity, retries,
+        counts_sum, elapsed, out if keep_output else None,
+    )
+
+
+def run_op_grid(
+    scenarios: "Sequence[OpScenario]",
+    *,
+    keep_outputs: bool = True,
+    progress: "Callable[[ScenarioResult], None] | None" = None,
+    engines: "EngineCache | None" = None,
+) -> list[ScenarioResult]:
+    """Run every workload-op cell (same contract as :func:`run_grid`)."""
+    if engines is None:
+        engines = EngineCache(devices=1)
+    results = []
+    for sc in scenarios:
+        r = run_op_scenario(sc, engines, keep_output=keep_outputs)
         results.append(r)
         if progress is not None:
             progress(r)

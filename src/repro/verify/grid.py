@@ -410,6 +410,107 @@ def fault_grid() -> "list[FaultCell]":
     ]
 
 
+# --------------------------------------------------------------- workloads
+# The operation axis of the grid (DESIGN.md §12): the paper varies
+# dimension/dtype/distribution/size for ONE op (full sort); these cells
+# vary the op itself.  Each op has its own oracle (run_op_scenario), and
+# ops producing the full sorted array share a byte-compare group with the
+# plain sort cell of the same input.
+
+WORKLOAD_OPS = ("sort", "top_k", "pairs_pytree", "merge")
+
+OP_DTYPES = ("int32", "uint32", "float32")
+OP_DISTS = ("random", "dupes", "local")
+OP_SIZES = (257, 2048)
+# top_k runs at two head fractions: k = n//8 lands in the host skip regime
+# (most buckets past the cut), k = n//2 keeps the sim partial-sort path
+# live — both dispatch arms stay pinned.
+OP_K_DIVS = (8, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpScenario:
+    """One executable cell of the workload conformance grid."""
+
+    op: str  # WORKLOAD_OPS
+    dtype: str
+    dist: str
+    n: int
+    k_div: int = 0  # top_k only: k = max(1, n // k_div)
+    seed: int = 7
+
+    # the single-array grid's duck-typed surface; the *executed* path and
+    # method land in the baseline from the engine report
+    path = "sim"
+    method = "op"
+
+    @property
+    def k(self) -> int:
+        return max(1, self.n // self.k_div) if self.k_div else 0
+
+    @property
+    def scenario_id(self) -> str:
+        kk = f"/k{self.k}" if self.op == "top_k" else ""
+        return f"op/{self.op}/{self.dtype}/{self.dist}/n{self.n}{kk}"
+
+    @property
+    def group_id(self) -> str:
+        """sort, pairs_pytree, and merge all produce the full sorted array
+        of the same input → one byte-compare group; top_k heads group per
+        ``k`` (every op computing the same head must agree)."""
+        head = f"head{self.k}" if self.op == "top_k" else "full"
+        return f"op/{head}/{self.dtype}/{self.dist}/n{self.n}/s{self.seed}"
+
+    def make_input(self) -> np.ndarray:
+        from repro.data.distributions import make_array
+
+        return make_array(
+            self.dist, self.n, seed=self.seed, dtype=np.dtype(self.dtype)
+        )
+
+
+def op_prune_reason(sc: OpScenario) -> "str | None":
+    if sc.op not in WORKLOAD_OPS:
+        return f"unknown op {sc.op!r}"
+    if sc.op == "top_k" and sc.k_div == 0:
+        return "top_k cells need a k divisor"
+    if sc.op != "top_k" and sc.k_div != 0:
+        return f"{sc.op} cells take no k divisor"
+    if np.dtype(sc.dtype).itemsize == 8:
+        return "64-bit keys ride the single-array grid's host rows"
+    return None
+
+
+def op_smoke_grid() -> "list[OpScenario]":
+    """Every runnable op cell: op × dtype × distribution × size (+ k)."""
+    out = []
+    for dtype, dist, n in itertools.product(OP_DTYPES, OP_DISTS, OP_SIZES):
+        for op in WORKLOAD_OPS:
+            if op == "top_k":
+                out.extend(
+                    OpScenario(op, dtype, dist, n, k_div) for k_div in OP_K_DIVS
+                )
+            else:
+                out.append(OpScenario(op, dtype, dist, n))
+    return [sc for sc in out if op_prune_reason(sc) is None]
+
+
+def op_tier1_grid() -> "list[OpScenario]":
+    """Fast pytest subset: every op, both top_k regimes, mixed dtypes."""
+    picked = [
+        OpScenario("sort", "int32", "random", 257),
+        OpScenario("top_k", "int32", "random", 257, 8),
+        OpScenario("top_k", "int32", "dupes", 2048, 2),
+        OpScenario("top_k", "uint32", "local", 2048, 8),
+        OpScenario("pairs_pytree", "int32", "random", 257),
+        OpScenario("pairs_pytree", "float32", "dupes", 2048),
+        OpScenario("merge", "int32", "random", 2048),
+        OpScenario("merge", "uint32", "dupes", 257),
+    ]
+    smoke_ids = {sc.scenario_id for sc in op_smoke_grid()}
+    return [sc for sc in picked if sc.scenario_id in smoke_ids]
+
+
 def pruned_cells(
     scenarios: "Sequence[Scenario] | None" = None,
     *,

@@ -41,6 +41,7 @@ SUITE_NAMES = (
     "sortd",
     "fleet",
     "faults",
+    "workloads",
 )
 
 

@@ -12,8 +12,8 @@ Three checks, all exiting non-zero with a listing on failure:
    listed extras.  Currently §2 ↔ ``repro.kernels.batched`` (fused
    batched row sort), §8 ↔ ``repro.serve.sortd`` (serving layer),
    §9 ↔ ``repro.perf`` (perf gate), §10 ↔ ``repro.serve.fleet``
-   (multi-worker serving), and §11 ↔ ``repro.net.faults`` (degraded
-   serving).
+   (multi-worker serving), §11 ↔ ``repro.net.faults`` (degraded
+   serving), and §12 ↔ ``repro.core.workloads`` (engine workload ops).
 3. **Intra-repo markdown links**: every relative ``[text](target)`` link
    in the top-level docs, ``docs/``, and ``benchmarks/README.md`` must
    point at an existing file (external ``http(s)``/``mailto`` links and
@@ -108,6 +108,24 @@ SYMBOL_SECTIONS = {
             "worker_down",
             "degraded_flushes",
             "fault_grid",
+        ),
+    ),
+    12: (
+        "src/repro/core/workloads.py",  # engine workload ops
+        (
+            "top_k",
+            "plan_top_k",
+            "merge_sorted",
+            "sort_pairs",
+            "argsort_keys",
+            "argsort",
+            "submit_merge",
+            "merge",
+            "OpScenario",
+            "op_smoke_grid",
+            "op_tier1_grid",
+            "run_op_grid",
+            "run_op_scenario",
         ),
     ),
 }

@@ -179,11 +179,13 @@ def main(argv=None) -> int:
         scenarios = grid.full_grid(devices=args.devices, mesh_axes=mesh_axes)
         segments = grid.segment_smoke_grid()
         faults = grid.fault_grid()
+        ops_cells = grid.op_smoke_grid()
     elif args.tier1:
         mode = "tier1"
         scenarios = grid.tier1_grid()
         segments = grid.segment_tier1_grid()
         faults = []
+        ops_cells = grid.op_tier1_grid()
     elif args.degraded:
         # The fault slice alone (fast CI lane): its cells are a subset of
         # the committed smoke baseline, so the drift gate still applies.
@@ -191,16 +193,19 @@ def main(argv=None) -> int:
         scenarios = []
         segments = []
         faults = grid.fault_grid()
+        ops_cells = []
     else:
         mode = "smoke"
         scenarios = grid.smoke_grid(devices=args.devices, mesh_axes=mesh_axes)
         segments = grid.segment_smoke_grid()
         faults = grid.fault_grid()
+        ops_cells = grid.op_smoke_grid()
     pruned = grid.pruned_cells(devices=args.devices, mesh_axes=mesh_axes)
     if args.filter:
         scenarios = [sc for sc in scenarios if args.filter in sc.scenario_id]
         segments = [sc for sc in segments if args.filter in sc.scenario_id]
         faults = [sc for sc in faults if args.filter in sc.scenario_id]
+        ops_cells = [sc for sc in ops_cells if args.filter in sc.scenario_id]
 
     baseline_path = pathlib.Path(
         args.baseline
@@ -230,7 +235,7 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     done = {"n": 0}
-    total = len(scenarios) + len(segments) + len(faults)
+    total = len(scenarios) + len(segments) + len(faults) + len(ops_cells)
 
     def progress(r):
         done["n"] += 1
@@ -256,6 +261,12 @@ def main(argv=None) -> int:
     # host fallback must match its bytes exactly.
     results += differential.run_fault_grid(
         faults, progress=progress, engines=engines
+    )
+    # Workload-op cells (DESIGN.md §12): top-k / pytree pairs / streaming
+    # merge vs their np.partition-style oracles; the full-output ops share
+    # cross-check groups with plain sort on the same input.
+    results += differential.run_op_grid(
+        ops_cells, progress=progress, engines=engines
     )
     mismatches = differential.cross_check(results)
     fails = [r for r in results if r.status != "pass"]
